@@ -1,0 +1,65 @@
+"""Figure 3: analytical time-vs-memory scatter over the Z config space.
+
+Sweeps slice sizes 0..12, pool counts 4..8 (left plot) and pool count 4
+(right plot); buckets configs by memory cost and keeps the fastest per
+bucket (the paper's plotting protocol).  Prints the Pareto knee and where
+the production config Zg lands.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import analytical
+from repro.data import synth
+
+
+def pareto_buckets(configs, c_m, c_t, n_buckets=24):
+    order = np.argsort(c_m)
+    c_m, c_t = np.asarray(c_m)[order], np.asarray(c_t)[order]
+    configs = [configs[i] for i in order]
+    edges = np.logspace(np.log10(c_m[0] + 1), np.log10(c_m[-1] + 1),
+                        n_buckets + 1)
+    rows = []
+    for lo, hi in zip(edges[:-1], edges[1:]):
+        m = (c_m >= lo) & (c_m < hi)
+        if not m.any():
+            continue
+        idx = np.nonzero(m)[0]
+        best = idx[np.argmin(c_t[idx])]
+        rows.append((configs[best], float(c_m[best]), float(c_t[best])))
+    return rows
+
+
+def run(fast: bool = True):
+    scale = common.FAST if fast else common.FULL
+    spec, first, second, f1, f2 = common.corpus(scale)
+    n_tokens = int(f2.sum())
+    qs = common.queries(scale, "aol")
+    qf = synth.query_term_freqs(qs, f2)
+
+    print("\n== bench_fig3: analytical C_T vs C_M scatter (paper §6) ==")
+    max_cfg = 3000 if fast else None
+    for label, pools in (("4-8 pools", (4, 8)), ("4 pools", (4, 4))):
+        configs = list(analytical.config_space(
+            (0, 12), pools, max_configs=max_cfg))
+        c_m = [analytical.memory_cost_closed_form(z, spec.vocab, n_tokens,
+                                                  1.0) for z in configs]
+        c_t = [analytical.time_cost(z, qf) for z in configs]
+        rows = pareto_buckets(configs, c_m, c_t)
+        print(f"-- {label}: {len(configs)} configs, bucket-Pareto front --")
+        for z, m, t in rows[:16]:
+            print(f"  Z={str(z):<36s} C_M={m:12.0f}  C_T={t:12.0f}")
+        # where does production Zg sit relative to the front?
+        zg_m = analytical.memory_cost_closed_form(common.ZG, spec.vocab,
+                                                  n_tokens, 1.0)
+        zg_t = analytical.time_cost(common.ZG, qf)
+        better = sum(1 for _, m, t in rows if m < zg_m and t < zg_t)
+        print(f"  Zg=(1,4,7,11): C_M={zg_m:.0f} C_T={zg_t:.0f}; "
+              f"{better} bucket-winners strictly dominate it "
+              f"({'near the knee' if better <= 4 else 'dominated'})")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""§Roofline report: reads benchmarks/dryrun_results.jsonl (written by
+``python -m repro.launch.dryrun --all``) and prints the three-term
+roofline table per (arch x shape x mesh x variant).
+
+Terms (per device): compute = FLOPs / 197e12, memory = bytes / 819e9,
+collective = wire bytes / 50e9.  ``frac`` = useful-model-FLOPs time over
+the dominant term (1.0 = at the roofline).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "dryrun_results.jsonl")
+
+
+def load(path=RESULTS):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for ln in f:
+            try:
+                rows.append(json.loads(ln))
+            except json.JSONDecodeError:
+                continue
+    # keep the LAST record per key (later runs supersede)
+    dedup = {}
+    for r in rows:
+        dedup[(r.get("arch"), r.get("shape"), r.get("mesh"),
+               r.get("variant", "baseline"))] = r
+    return list(dedup.values())
+
+
+def run(fast: bool = True, variant=None):
+    rows = load()
+    if not rows:
+        print("\n== bench_roofline: no dryrun_results.jsonl yet — run "
+              "`python -m repro.launch.dryrun --all` first ==")
+        return []
+    print("\n== bench_roofline: three-term roofline per cell ==")
+    hdr = (f"{'arch':<20s} {'shape':<15s} {'mesh':<7s} {'variant':<9s} "
+           f"{'compute':>10s} {'memory':>10s} {'collect':>10s} "
+           f"{'bound':<10s} {'frac':>6s} {'useful':>7s} {'mem/dev':>8s}")
+    print(hdr)
+    ok = sorted([r for r in rows if r.get("ok")],
+                key=lambda r: (r.get("variant", ""), r["arch"], r["shape"],
+                               r["mesh"]))
+    # recompute derived metrics from the CURRENT model-flops accounting
+    # (records bake in the value from record time)
+    try:
+        from repro.configs import registry
+        from repro.launch.roofline import model_flops_for
+        for r in ok:
+            entry = registry.get(r["arch"])
+            spec = registry.get_shape(r["arch"], r["shape"])
+            mf = model_flops_for(r["arch"], r["shape"], entry, spec)
+            r["model_flops"] = mf
+            t_useful = (mf / r["n_devices"]) / 197e12
+            t_bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+            r["roofline_fraction"] = t_useful / t_bound if t_bound else 0.0
+            hlo_global = r["flops_per_dev"] * r["n_devices"]
+            r["useful_flop_ratio"] = mf / hlo_global if hlo_global else 0.0
+    except Exception:
+        pass
+    for r in ok:
+        if variant and r.get("variant") != variant:
+            continue
+        print(f"{r['arch']:<20s} {r['shape']:<15s} {r['mesh']:<7s} "
+              f"{r.get('variant', ''):<9s} "
+              f"{r['t_compute'] * 1e3:9.2f}ms {r['t_memory'] * 1e3:9.2f}ms "
+              f"{r['t_collective'] * 1e3:9.2f}ms {r['bottleneck']:<10s} "
+              f"{r['roofline_fraction']:6.3f} {r['useful_flop_ratio']:7.3f} "
+              f"{r.get('per_device_mem', 0) / 1e9:7.1f}G")
+    bad = [r for r in rows if not r.get("ok")]
+    for r in bad:
+        print(f"FAILED: {r['arch']} {r['shape']} {r['mesh']} "
+              f"{r.get('variant')}: {r.get('error', '')[:120]}")
+    print(f"{len(ok)} ok, {len(bad)} failed")
+    return ok
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""Table 1 (§9.1): memory cost C_M*, postings-traversal time C_T*, and
+top-100 conjunctive retrieval time R_100 for the paper's pool configs,
+on the indexed second corpus half, for the three query logs.
+
+Validates the paper's ORDERINGS: Zg near the 4-pool knee; Z2 (8 pools)
+~2-3x smaller footprint at comparable speed; memory rises / time falls
+from Z'0 -> Z'7.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import analytical
+from repro.core.query import make_engine
+
+
+def _engine_for(seg, scale, freqs):
+    fmax = max(int(freqs.max()), 1)
+    max_len = 1 << (fmax - 1).bit_length()
+    max_slices = int(analytical.slices_needed(seg.layout.z, fmax)) + 1
+    return make_engine(seg.layout, max_slices, max_len)
+
+
+def _batched(fn, static_k=None):
+    if static_k is None:
+        def run(state, terms, lens):
+            return jax.lax.map(lambda q: fn(state, q[0], q[1][0]),
+                               (terms, lens[:, None]))
+    else:
+        def run(state, terms, lens):
+            return jax.lax.map(
+                lambda q: fn(state, q[0], q[1][0], static_k)[1],
+                (terms, lens[:, None]))
+    return jax.jit(run)
+
+
+def run(fast: bool = True, configs=None):
+    scale = common.FAST if fast else common.FULL
+    spec, first, second, f1, f2 = common.corpus(scale)
+    configs = configs or common.TABLE1
+    qsets = {k: common.pad_queries(common.queries(scale, k))
+             for k in common.QUERY_KINDS}
+
+    print("\n== bench_table1: pool configurations (paper §9.1) ==")
+    print(f"corpus: {second.shape[0]} docs, vocab {scale.vocab}, "
+          f"{int((second >= 0).sum())} postings; "
+          f"{scale.n_queries} queries per log")
+    hdr = (f"{'Z':<28s} {'C_M*':>10s} | "
+           + " ".join(f"C_T*({k[:3]})" for k in common.QUERY_KINDS) + " | "
+           + " ".join(f"R100({k[:3]})" for k in common.QUERY_KINDS))
+    print(hdr + "   (times: ms/query, median of 3)")
+    results = {}
+    for name, z in configs.items():
+        seg, info = common.build_segment(z, scale)
+        c_m = seg.memory_slots_used()
+        eng = _engine_for(seg, scale, f2)
+        read_all_b = _batched(eng.read_all)
+        topk_b = _batched(eng.topk_conjunctive, static_k=100)
+        cts, r100s = [], []
+        for kind in common.QUERY_KINDS:
+            terms, lens = qsets[kind]
+            t, s = common.time_fn(read_all_b, seg.state, terms, lens)
+            cts.append(t / scale.n_queries * 1e3)
+            t, s = common.time_fn(topk_b, seg.state, terms, lens)
+            r100s.append(t / scale.n_queries * 1e3)
+        results[name] = dict(c_m=c_m, ct=cts, r100=r100s)
+        print(f"{name:<5s}{str(z):<23s} {c_m:>10d} | "
+              + " ".join(f"{v:9.3f}" for v in cts) + " | "
+              + " ".join(f"{v:9.3f}" for v in r100s))
+
+    if "Zg" in results and "Z2" in results:
+        r = results["Zg"]["c_m"] / max(results["Z2"]["c_m"], 1)
+        print(f"memory ratio Zg/Z2 = {r:.2f}x (paper: ~2.6x; 8-pool Z2 "
+              f"shrinks footprint at comparable speed)")
+    return results
+
+
+if __name__ == "__main__":
+    run()

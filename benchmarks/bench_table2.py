@@ -1,0 +1,62 @@
+"""Table 2 (§9.2): history-based Starting Pool policies.
+
+Gathers term stats from the FIRST corpus half, indexes the SECOND half
+under SP(z0) / SP(ceil) / SP(floor) / SP(lambda) for Zg, Z2, Z'5.
+Validates the paper's finding: history-based policies WASTE memory
+(ceil the most) with no convincing speed gain — churn defeats history.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.bench_table1 import _batched, _engine_for
+from repro.core import policies
+
+
+CONFIGS = {"Zg": common.ZG,
+           "Z2": common.Z_MULTI["Z2"],
+           "Z'5": common.Z_FOUR["Z'5"]}
+POLICIES = ("default", "sp_ceil", "sp_floor", "sp_lambda")
+
+
+def run(fast: bool = True):
+    scale = common.FAST if fast else common.FULL
+    spec, first, second, f1, f2 = common.corpus(scale)
+    qsets = {k: common.pad_queries(common.queries(scale, k))
+             for k in common.QUERY_KINDS}
+
+    print("\n== bench_table2: starting-pool policies (paper §9.2) ==")
+    out = {}
+    for zname, z in CONFIGS.items():
+        base_cm = None
+        for pol in POLICIES:
+            table = (None if pol == "default"
+                     else policies.start_pools_for_vocab(pol, z, f1))
+            seg, info = common.build_segment(z, scale,
+                                             term_start_pools=table)
+            c_m = seg.memory_slots_used()
+            eng = _engine_for(seg, scale, f2)
+            read_all_b = _batched(eng.read_all)
+            cts = []
+            for kind in common.QUERY_KINDS:
+                terms, lens = qsets[kind]
+                t, _ = common.time_fn(read_all_b, seg.state, terms, lens)
+                cts.append(t / scale.n_queries * 1e3)
+            if pol == "default":
+                base_cm = c_m
+            waste = (c_m - base_cm) / base_cm * 100 if base_cm else 0.0
+            out[(zname, pol)] = dict(c_m=c_m, waste_pct=waste, ct=cts)
+            print(f"{zname:<5s} SP({pol:<7s}) C_M*={c_m:>10d} "
+                  f"({waste:+6.2f}% vs SP(z0)) | C_T* "
+                  + " ".join(f"{v:8.3f}" for v in cts))
+    ceil_wastes = [v["waste_pct"] for (zn, p), v in out.items()
+                   if p == "sp_ceil"]
+    print(f"SP(ceil) memory waste: {min(ceil_wastes):.1f}%.."
+          f"{max(ceil_wastes):.1f}% (paper: 8-16%; positive = history "
+          f"wastes memory under churn)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

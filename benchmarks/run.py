@@ -1,0 +1,46 @@
+"""Benchmark harness entry point: one module per paper table/figure plus
+the beyond-paper paged-KV transfer and the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+SUITES = ("analytical", "fig2", "fig3", "table1", "table2", "ingest",
+          "paged_kv", "roofline")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger corpus/query scale (slower)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args(argv)
+    picked = args.only.split(",") if args.only else SUITES
+    fast = not args.full
+
+    t_all = time.perf_counter()
+    failures = []
+    for name in picked:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            mod.run(fast=fast)
+            print(f"[{name}: {time.perf_counter() - t0:.1f}s]")
+        except Exception:
+            failures.append(name)
+            print(f"[{name}: FAILED]")
+            traceback.print_exc()
+    print(f"\n== benchmarks done in {time.perf_counter() - t_all:.1f}s; "
+          f"{len(failures)} failures {failures or ''} ==")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Paged-KV serving example: the paper's allocator running a decoder.
+
+    PYTHONPATH=src python examples/lm_serve_paged.py
+
+Continuous batching with the slice-pool KV cache and the Pallas
+paged-attention kernel (interpret mode on CPU).  Sweeps two Z_kv configs
+to show the serving Goldilocks trade-off (KV waste vs chain hops).
+"""
+from repro.launch import serve
+
+for z in ("6,6,6", "6,8,10"):
+    print(f"\n===== Z_kv = <{z}> =====")
+    serve.main(["--requests", "6", "--max-seqs", "3",
+                "--max-len", "320", "--z", z])

@@ -1,0 +1,33 @@
+"""End-to-end LM training driver example: train, crash, resume.
+
+    PYTHONPATH=src python examples/train_lm.py
+
+Wraps repro.launch.train: ~0.1M-param tinyllama-family smoke config on
+CPU (swap --preset 100m for the 100M config on real hardware), with
+checkpoint/restart, microbatch accumulation and the straggler watchdog.
+"""
+import shutil
+import tempfile
+
+from repro.launch import train
+
+ckpt = tempfile.mkdtemp(prefix="repro_train_")
+common = ["--steps", "60", "--batch", "8", "--seq", "64",
+          "--save-every", "15", "--ckpt-dir", ckpt, "--microbatches", "2"]
+
+print("=== phase 1: train until an injected crash at step 40 ===")
+try:
+    train.main(common + ["--fail-at", "40"])
+except SystemExit as e:
+    print(f"(crashed as planned: {e})")
+
+print("\n=== phase 2: resume from the last checkpoint and finish ===")
+loss = train.main(common + ["--resume"])
+assert loss < 5.5, f"loss should be trending down, got {loss}"
+
+print("\n=== phase 3: int8-compressed gradients (error feedback) ===")
+loss_c = train.main(["--steps", "30", "--batch", "8", "--seq", "64",
+                     "--ckpt-dir", ckpt + "_c", "--compress"])
+print(f"compressed-gradient run reached loss {loss_c:.4f}")
+shutil.rmtree(ckpt, ignore_errors=True)
+shutil.rmtree(ckpt + "_c", ignore_errors=True)

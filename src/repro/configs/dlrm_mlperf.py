@@ -1,0 +1,4 @@
+"""Per-arch config module (spec deliverable f)."""
+from repro.configs.other_archs import DLRM_MLPERF as CONFIG
+
+__all__ = ["CONFIG"]

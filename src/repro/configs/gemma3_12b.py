@@ -1,0 +1,4 @@
+"""Per-arch config module (spec deliverable f)."""
+from repro.configs.lm_archs import GEMMA3_12B as CONFIG
+
+__all__ = ["CONFIG"]

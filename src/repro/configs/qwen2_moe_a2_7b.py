@@ -1,0 +1,4 @@
+"""Per-arch config module (spec deliverable f)."""
+from repro.configs.lm_archs import QWEN2_MOE_A2_7B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,196 @@
+"""Architecture registry: ``--arch`` ids -> config, shapes, input specs.
+
+``input_specs(arch, shape)`` returns jax.ShapeDtypeStruct stand-ins for
+every model input of that (arch x shape) cell — weak-type-correct,
+shardable, never allocated (the dry-run pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import lm_archs, other_archs
+from repro.configs.base import (GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
+                                GNNConfig, LMConfig, RecsysConfig, ShapeSpec)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    family: str                      # lm | gnn | recsys
+    config: object
+    shapes: Tuple[ShapeSpec, ...]
+    skip_shapes: Tuple[str, ...] = ()
+    skip_reason: str = ""
+
+
+_FULL_ATTN_SKIP = (
+    "long_500k requires sub-quadratic attention structure; this arch is "
+    "pure full-attention (DESIGN.md §4 records the skip)."
+)
+
+ARCHS: Dict[str, ArchEntry] = {
+    "tinyllama-1.1b": ArchEntry("lm", lm_archs.TINYLLAMA_1B, LM_SHAPES,
+                                ("long_500k",), _FULL_ATTN_SKIP),
+    "gemma3-12b": ArchEntry("lm", lm_archs.GEMMA3_12B, LM_SHAPES),
+    "deepseek-coder-33b": ArchEntry("lm", lm_archs.DEEPSEEK_CODER_33B,
+                                    LM_SHAPES, ("long_500k",),
+                                    _FULL_ATTN_SKIP),
+    "qwen2-moe-a2.7b": ArchEntry("lm", lm_archs.QWEN2_MOE_A2_7B, LM_SHAPES,
+                                 ("long_500k",), _FULL_ATTN_SKIP),
+    "grok-1-314b": ArchEntry("lm", lm_archs.GROK_1_314B, LM_SHAPES,
+                             ("long_500k",), _FULL_ATTN_SKIP),
+    "schnet": ArchEntry("gnn", other_archs.SCHNET, GNN_SHAPES),
+    "xdeepfm": ArchEntry("recsys", other_archs.XDEEPFM, RECSYS_SHAPES),
+    "dcn-v2": ArchEntry("recsys", other_archs.DCN_V2, RECSYS_SHAPES),
+    "dlrm-mlperf": ArchEntry("recsys", other_archs.DLRM_MLPERF,
+                             RECSYS_SHAPES),
+    "dien": ArchEntry("recsys", other_archs.DIEN, RECSYS_SHAPES),
+}
+
+
+def get(arch: str) -> ArchEntry:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_shape(arch: str, shape: str) -> ShapeSpec:
+    entry = get(arch)
+    for s in entry.shapes:
+        if s.name == shape:
+            return s
+    raise KeyError(f"unknown shape {shape!r} for {arch}")
+
+
+def cells(include_skipped: bool = False):
+    """Every (arch, shape) cell in the assignment grid."""
+    for arch, entry in ARCHS.items():
+        for s in entry.shapes:
+            skipped = s.name in entry.skip_shapes
+            if skipped and not include_skipped:
+                continue
+            yield arch, s.name, skipped
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _gnn_sample_sizes(spec: ShapeSpec) -> Tuple[int, int]:
+    """Padded (n_nodes, n_edges) for the lowered graph batch."""
+    if spec.name == "minibatch_lg":
+        b = spec.extra("batch_nodes")
+        f1, f2 = spec.extra("fanout")
+        hop1 = b * f1
+        hop2 = (b + hop1) * f2
+        return b + hop1 + hop2, hop1 + hop2       # sampled subgraph
+    if spec.name == "molecule":
+        b = spec.extra("batch")
+        return b * spec.extra("n_nodes"), b * spec.extra("n_edges")
+    return spec.extra("n_nodes"), spec.extra("n_edges")
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's data arguments."""
+    entry = get(arch)
+    spec = get_shape(arch, shape)
+    if entry.family == "lm":
+        B, S = spec.global_batch, spec.seq_len
+        if spec.kind in ("train", "prefill"):
+            return {"tokens": _sds((B, S), jnp.int32)}
+        # decode: one new token; the KV cache is carried state, not input
+        return {"token": _sds((B, 1), jnp.int32),
+                "pos": _sds((), jnp.int32)}
+    if entry.family == "gnn":
+        n, e = _gnn_sample_sizes(spec)
+        d_feat = spec.extra("d_feat")
+        out = {
+            "src": _sds((e,), jnp.int32),
+            "dst": _sds((e,), jnp.int32),
+            "edge_dist": _sds((e,), jnp.float32),
+            "graph_id": _sds((n,), jnp.int32),
+        }
+        if spec.name == "molecule":
+            out["atom_type"] = _sds((n,), jnp.int32)
+            out["targets"] = _sds((spec.extra("batch"),), jnp.float32)
+        else:
+            out["node_feat"] = _sds((n, d_feat), jnp.float32)
+            out["targets"] = _sds((1,), jnp.float32)
+        return out
+    # recsys
+    cfg: RecsysConfig = entry.config
+    B = spec.global_batch
+    if spec.kind == "retrieval":
+        n_cand = spec.extra("n_candidates")
+        return {"user_sparse": _sds((1, cfg.n_sparse), jnp.int32),
+                "cand_ids": _sds((n_cand,), jnp.int32)}
+    out = {"sparse": _sds((B, cfg.n_sparse), jnp.int32)}
+    if cfg.n_dense:
+        out["dense"] = _sds((B, cfg.n_dense), jnp.float32)
+    if cfg.interaction == "augru":
+        out["hist"] = _sds((B, cfg.seq_len, 2), jnp.int32)
+        out["hist_len"] = _sds((B,), jnp.int32)
+    if spec.kind == "train":
+        out["label"] = _sds((B,), jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-cell lowering overrides (fit-memory knobs for the dry-run)
+# ---------------------------------------------------------------------------
+DRYRUN_OVERRIDES: Dict[Tuple[str, str], dict] = {
+    # (arch, shape): dict(n_microbatches=..., q_chunk=..., seq_sharded=...)
+    ("tinyllama-1.1b", "train_4k"): dict(n_microbatches=2, q_chunk=512),
+    ("gemma3-12b", "train_4k"): dict(n_microbatches=4, q_chunk=512),
+    ("deepseek-coder-33b", "train_4k"): dict(n_microbatches=8, q_chunk=256),
+    ("qwen2-moe-a2.7b", "train_4k"): dict(n_microbatches=4, q_chunk=512),
+    ("grok-1-314b", "train_4k"): dict(n_microbatches=8, q_chunk=256),
+    ("tinyllama-1.1b", "prefill_32k"): dict(q_chunk=256, seq_sharded=True),
+    ("gemma3-12b", "prefill_32k"): dict(q_chunk=256, seq_sharded=True),
+    ("deepseek-coder-33b", "prefill_32k"): dict(q_chunk=128,
+                                                seq_sharded=True),
+    ("qwen2-moe-a2.7b", "prefill_32k"): dict(q_chunk=256, seq_sharded=True),
+    ("grok-1-314b", "prefill_32k"): dict(q_chunk=128, seq_sharded=True),
+}
+
+
+def overrides(arch: str, shape: str) -> dict:
+    return dict(DRYRUN_OVERRIDES.get((arch, shape), {}))
+
+
+def reduced_config(arch: str):
+    """Tiny same-family config for CPU smoke tests (spec deliverable f)."""
+    entry = get(arch)
+    cfg = entry.config
+    if entry.family == "lm":
+        kw = dict(
+            name=cfg.name + "-smoke", n_layers=2,
+            d_model=64, n_heads=4, n_kv_heads=max(1, cfg.n_kv_heads // 8),
+            d_head=16, d_ff=128, vocab=256,
+            param_dtype="float32", compute_dtype="float32",
+            rope_theta=cfg.rope_theta, remat=False,
+        )
+        if cfg.moe:
+            # capacity_factor high enough that smoke tests never drop
+            # tokens (keeps prefill/decode paths bit-consistent).
+            kw.update(moe=True, n_experts=max(4, cfg.n_experts // 8),
+                      moe_top_k=min(2, cfg.moe_top_k),
+                      n_shared_experts=min(1, cfg.n_shared_experts),
+                      moe_d_ff=64, capacity_factor=8.0)
+        if cfg.local_global_ratio:
+            kw.update(sliding_window=8,
+                      local_global_ratio=1, n_layers=2)
+        return dataclasses.replace(cfg, **{k: v for k, v in kw.items()
+                                           if hasattr(cfg, k)})
+    if entry.family == "gnn":
+        return dataclasses.replace(cfg, n_rbf=16)
+    # recsys: shrink tables
+    small_vocab = tuple(min(v, 1000) for v in cfg.vocab_sizes)
+    return dataclasses.replace(cfg, vocab_sizes=small_vocab)

@@ -1,0 +1,26 @@
+"""Term-history statistics for Starting-Pool policies (paper §7).
+
+H(t) = frequency of term t in the preceding (read-only) index segment.
+The paper notes ~7% daily churn in the top-10k terms; :func:`churn`
+quantifies that on our synthetic streams so benchmarks can report it
+alongside SP-policy results.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def history_from_freqs(freqs) -> np.ndarray:
+    return np.asarray(freqs, np.int64)
+
+
+def churn(freqs_a, freqs_b, top_k: int = 10000) -> float:
+    """Fraction of top-k terms (by frequency) in A no longer top-k in B."""
+    a = np.asarray(freqs_a)
+    b = np.asarray(freqs_b)
+    k = min(top_k, (a > 0).sum(), (b > 0).sum())
+    if k == 0:
+        return 0.0
+    top_a = set(np.argsort(-a)[:k].tolist())
+    top_b = set(np.argsort(-b)[:k].tolist())
+    return 1.0 - len(top_a & top_b) / k

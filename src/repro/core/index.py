@@ -1,0 +1,87 @@
+"""Active index segment: tweet ingest + dictionary (paper §3.2).
+
+``ActiveSegment`` owns a :class:`~repro.core.slicepool.PoolState` plus the
+docid high-water mark; tweets arrive as (batch, max_len) padded term-id
+matrices and are flattened into a (term, posting) stream consumed by the
+scan-based allocator.  The dictionary is implicit: term ids index the
+``tail``/``freq`` arrays (string->id lives in data/tokenizer.py, host-side,
+exactly as Earlybird's dictionary sits outside the postings pools).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import postings as post
+from repro.core import slicepool
+from repro.core.pointers import PoolLayout
+
+
+@dataclasses.dataclass
+class ActiveSegment:
+    layout: PoolLayout
+    vocab_size: int
+    max_docs: int = post.MAX_DOC
+    state: slicepool.PoolState = None
+    next_docid: int = 0
+
+    def __post_init__(self):
+        if self.state is None:
+            self.state = slicepool.init_state(self.layout, self.vocab_size)
+        self._ingest = slicepool.make_ingest_fn(self.layout, self.vocab_size)
+        self._flatten = make_flattener()
+
+    @property
+    def is_full(self) -> bool:
+        return self.next_docid >= self.max_docs
+
+    def ingest(self, docs: jax.Array, start_pools: Optional[jax.Array] = None,
+               term_start_pools: Optional[jax.Array] = None) -> int:
+        """Index a batch of documents.
+
+        Args:
+          docs: int32[batch, max_len] term ids, padded with -1.
+          start_pools: optional per-occurrence starting pools.
+          term_start_pools: optional uint32[vocab] per-term starting pools
+            (SP policy table); gathered per occurrence.
+        Returns the number of documents indexed.
+        """
+        batch = docs.shape[0]
+        terms, plist, valid = self._flatten(docs, self.next_docid)
+        if term_start_pools is not None:
+            start_pools = term_start_pools[
+                jnp.clip(terms, 0, self.vocab_size - 1).astype(jnp.int32)]
+        self.state = self._ingest(self.state, terms, plist, start_pools, valid)
+        self.next_docid += batch
+        return batch
+
+    def memory_slots_used(self) -> int:
+        return int(slicepool.memory_slots_used(self.layout, self.state))
+
+    def term_freqs(self) -> np.ndarray:
+        return np.asarray(self.state.freq)
+
+    def check_health(self) -> None:
+        if bool(self.state.overflow):
+            raise MemoryError(
+                "slice pools exhausted; raise slices_per_pool in the layout")
+
+
+def make_flattener():
+    """(batch, L) padded docs -> flat (terms, packed postings, valid)."""
+    @jax.jit
+    def flatten(docs, first_docid):
+        batch, L = docs.shape
+        pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.uint32), (batch, L))
+        ids = first_docid + jnp.arange(batch, dtype=jnp.uint32)
+        ids = jnp.broadcast_to(ids[:, None], (batch, L))
+        valid = docs >= 0
+        terms = jnp.where(valid, docs, 0).astype(jnp.uint32)
+        plist = post.pack(ids, jnp.minimum(pos, jnp.uint32(post.MAX_POS)))
+        return terms.reshape(-1), plist.reshape(-1), valid.reshape(-1)
+
+    return flatten

@@ -1,0 +1,184 @@
+"""Packed 32-bit slice pointers (paper §3.2).
+
+A pointer addresses a slot inside a slice inside a pool:
+
+    [ pool_bits | slice_bits(p) | offset_bits(p) ]   (MSB -> LSB)
+
+where ``offset_bits(p) == z_p`` (slice size ``2**z_p``) and
+``slice_bits(p) = 32 - pool_bits - z_p``.  This is exactly the paper's
+layout ("2 bits ... pool, 19-29 bits ... slice index, 1-11 bits ...
+offset") generalised to any power-of-two pool count.
+
+Postings and pointers both fit in one uint32 "memory slot" (paper §3.3).
+``NULL == 0xFFFF_FFFF`` is reserved (the all-ones slice of the last pool
+is never allocated; see :class:`PoolLayout.max_slices`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+NULL = np.uint32(0xFFFFFFFF)
+PTR_BITS = 32
+
+
+def _ceil_log2(x: int) -> int:
+    return max(1, int(math.ceil(math.log2(max(x, 2)))))
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolLayout:
+    """Static description of a pool configuration ``Z``.
+
+    Attributes:
+      z: slice-size exponents ``(z_0, ..., z_{P-1})`` — paper's ``Z``.
+      slices_per_pool: capacity of each pool, in slices.
+    """
+
+    z: Tuple[int, ...]
+    slices_per_pool: Tuple[int, ...]
+
+    # ---- derived static properties -------------------------------------
+    @property
+    def num_pools(self) -> int:
+        return len(self.z)
+
+    @property
+    def pool_bits(self) -> int:
+        return _ceil_log2(self.num_pools)
+
+    @property
+    def slice_sizes(self) -> Tuple[int, ...]:
+        return tuple(1 << zp for zp in self.z)
+
+    @property
+    def slice_bits(self) -> Tuple[int, ...]:
+        return tuple(PTR_BITS - self.pool_bits - zp for zp in self.z)
+
+    def max_slices(self, p: int) -> int:
+        # all-ones slice index in the last pool is reserved so that NULL
+        # can never collide with a real pointer.
+        cap = 1 << self.slice_bits[p]
+        return cap - 1 if p == self.num_pools - 1 else cap
+
+    @property
+    def pool_slots(self) -> Tuple[int, ...]:
+        return tuple(
+            n * s for n, s in zip(self.slices_per_pool, self.slice_sizes)
+        )
+
+    @property
+    def pool_base(self) -> Tuple[int, ...]:
+        bases, acc = [], 0
+        for slots in self.pool_slots:
+            bases.append(acc)
+            acc += slots
+        return tuple(bases)
+
+    @property
+    def total_slots(self) -> int:
+        return sum(self.pool_slots)
+
+    def __post_init__(self):
+        if not self.z:
+            raise ValueError("Z must be non-empty")
+        if any(b <= a for a, b in zip(self.z, self.z[1:])):
+            raise ValueError(f"Z must be strictly increasing, got {self.z}")
+        if len(self.slices_per_pool) != len(self.z):
+            raise ValueError("slices_per_pool must match Z length")
+        for p, (n, zp) in enumerate(zip(self.slices_per_pool, self.z)):
+            bits = PTR_BITS - self.pool_bits - zp
+            if bits <= 0:
+                raise ValueError(
+                    f"pool {p}: z_p={zp} leaves no slice bits "
+                    f"(pool_bits={self.pool_bits})"
+                )
+            if n > self.max_slices(p):
+                raise ValueError(
+                    f"pool {p}: {n} slices exceed addressable "
+                    f"{self.max_slices(p)} with {bits} slice bits"
+                )
+
+    # ---- device-side constant tables -----------------------------------
+    def tables(self):
+        """Per-pool constant arrays used by jitted encode/decode."""
+        return dict(
+            z=jnp.asarray(self.z, jnp.uint32),
+            slice_size=jnp.asarray(self.slice_sizes, jnp.uint32),
+            offset_mask=jnp.asarray(
+                [(1 << zp) - 1 for zp in self.z], jnp.uint32
+            ),
+            slice_mask=jnp.asarray(
+                [(1 << b) - 1 for b in self.slice_bits], jnp.uint32
+            ),
+            base=jnp.asarray(self.pool_base, jnp.uint32),
+        )
+
+
+# --------------------------------------------------------------------------
+# Jit-friendly encode / decode.  All take the `tables()` dict (closed over
+# as constants when jitted) plus traced pool/slice/offset/ptr values.
+# --------------------------------------------------------------------------
+def encode(tbl, pool_bits: int, pool, slice_idx, offset):
+    """Pack (pool, slice, offset) into a uint32 pointer."""
+    pool = pool.astype(jnp.uint32)
+    z = tbl["z"][pool]
+    shift_pool = jnp.uint32(PTR_BITS - pool_bits)
+    return (
+        (pool << shift_pool)
+        | (slice_idx.astype(jnp.uint32) << z)
+        | offset.astype(jnp.uint32)
+    )
+
+
+def decode(tbl, pool_bits: int, ptr):
+    """Unpack a uint32 pointer into (pool, slice, offset)."""
+    ptr = ptr.astype(jnp.uint32)
+    pool = ptr >> jnp.uint32(PTR_BITS - pool_bits)
+    pool = jnp.minimum(pool, jnp.uint32(tbl["z"].shape[0] - 1))
+    z = tbl["z"][pool]
+    rest = ptr & ((jnp.uint32(1) << jnp.uint32(PTR_BITS - pool_bits)) - 1)
+    slice_idx = (rest >> z) & tbl["slice_mask"][pool]
+    offset = rest & tbl["offset_mask"][pool]
+    return pool, slice_idx, offset
+
+
+def to_addr(tbl, pool, slice_idx, offset):
+    """Flat heap address of a decoded pointer."""
+    return (
+        tbl["base"][pool]
+        + slice_idx * tbl["slice_size"][pool]
+        + offset
+    ).astype(jnp.uint32)
+
+
+def ptr_to_addr(tbl, pool_bits: int, ptr):
+    return to_addr(tbl, *decode(tbl, pool_bits, ptr))
+
+
+def is_null(ptr):
+    return ptr == jnp.uint32(NULL)
+
+
+# Host-side convenience (numpy scalars) -------------------------------------
+def encode_host(layout: PoolLayout, pool: int, slice_idx: int, offset: int) -> int:
+    z = layout.z[pool]
+    return (pool << (PTR_BITS - layout.pool_bits)) | (slice_idx << z) | offset
+
+
+def decode_host(layout: PoolLayout, ptr: int) -> Tuple[int, int, int]:
+    pool = min(ptr >> (PTR_BITS - layout.pool_bits), layout.num_pools - 1)
+    z = layout.z[pool]
+    rest = ptr & ((1 << (PTR_BITS - layout.pool_bits)) - 1)
+    return pool, rest >> z, rest & ((1 << z) - 1)
+
+
+def production_layout(slices_per_pool: Sequence[int] | None = None) -> PoolLayout:
+    """The paper's production config ``Z^g = <1, 4, 7, 11>``."""
+    if slices_per_pool is None:
+        slices_per_pool = (1 << 15, 1 << 13, 1 << 11, 1 << 9)
+    return PoolLayout(z=(1, 4, 7, 11), slices_per_pool=tuple(slices_per_pool))

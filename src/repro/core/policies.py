@@ -1,0 +1,64 @@
+"""Starting Pool (SP) allocation policies (paper §7).
+
+Each policy maps a term's historical frequency ``H(t)`` (from the previous,
+now read-only, index segment) to the pool index its FIRST slice should come
+from.  Out-of-vocabulary terms (H == 0 here) always start at pool 0.
+
+Policies (paper notation):
+  * ``sp_default``  — SP(z_0): ignore history, start at pool 0.
+  * ``sp_ceil``     — SP(ceil(H)): smallest slice size larger than H.
+  * ``sp_floor``    — SP(floor(H)): largest slice size smaller than H.
+  * ``sp_lambda``   — SP(Lambda(H, z_{P-1})): last pool iff H >= 2**z_{P-1},
+                      else pool 0 ("long vs short" split).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def sp_default(z: Tuple[int, ...], hist):
+    hist = jnp.asarray(hist)
+    return jnp.zeros(hist.shape, jnp.uint32)
+
+
+def sp_ceil(z: Tuple[int, ...], hist):
+    """Start from the pool with the smallest slice size >= ... (paper: the
+    smallest slice size *larger than* H; last pool if H exceeds all)."""
+    hist = jnp.asarray(hist, jnp.int64)
+    sizes = jnp.asarray([1 << zz for zz in z], jnp.int64)  # ascending
+    # pool p iff 2**z_{p-1} < H <= 2**z_p ; pool P-1 if H > 2**z_{P-1}
+    p = jnp.searchsorted(sizes, hist, side="left").astype(jnp.uint32)
+    p = jnp.minimum(p, jnp.uint32(len(z) - 1))
+    return jnp.where(hist > 0, p, jnp.uint32(0))
+
+
+def sp_floor(z: Tuple[int, ...], hist):
+    """Largest slice size <= H (pool 0 if H below all; last pool capped)."""
+    hist = jnp.asarray(hist, jnp.int64)
+    sizes = jnp.asarray([1 << zz for zz in z], jnp.int64)
+    p = jnp.searchsorted(sizes, hist, side="right").astype(jnp.int32) - 1
+    p = jnp.clip(p, 0, len(z) - 1).astype(jnp.uint32)
+    return jnp.where(hist > 0, p, jnp.uint32(0))
+
+
+def sp_lambda(z: Tuple[int, ...], hist):
+    hist = jnp.asarray(hist, jnp.int64)
+    thr = jnp.int64(1 << z[-1])
+    return jnp.where(hist >= thr, jnp.uint32(len(z) - 1), jnp.uint32(0))
+
+
+POLICIES: Dict[str, Callable] = {
+    "sp_default": sp_default,
+    "sp_ceil": sp_ceil,
+    "sp_floor": sp_floor,
+    "sp_lambda": sp_lambda,
+}
+
+
+def start_pools_for_vocab(policy: str, z: Tuple[int, ...],
+                          history_freqs) -> jnp.ndarray:
+    """Precompute a per-term starting-pool table from a history table."""
+    return POLICIES[policy](z, history_freqs)

@@ -1,0 +1,29 @@
+"""Posting encoding (paper §3.2): one uint32 = 24-bit docid | 8-bit position.
+
+Tweets are <= 140 chars so 8 bits suffice for term position; a term
+occurring k times in one tweet yields k postings.  Docids are assigned in
+ascending ingest order within a segment (max 2**24 - 1 per segment; the
+production segment holds 2**23 tweets).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+DOC_BITS = 24
+POS_BITS = 8
+MAX_DOC = (1 << DOC_BITS) - 1
+MAX_POS = (1 << POS_BITS) - 1
+
+
+def pack(docid, pos):
+    docid = docid.astype(jnp.uint32) if hasattr(docid, "astype") else jnp.uint32(docid)
+    pos = pos.astype(jnp.uint32) if hasattr(pos, "astype") else jnp.uint32(pos)
+    return (docid << jnp.uint32(POS_BITS)) | (pos & jnp.uint32(MAX_POS))
+
+
+def docid(posting):
+    return posting >> jnp.uint32(POS_BITS)
+
+
+def position(posting):
+    return posting & jnp.uint32(MAX_POS)

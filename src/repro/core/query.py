@@ -1,0 +1,175 @@
+"""Boolean query evaluation over slice-pool postings (paper §3.1, §8).
+
+Earlybird semantics: postings are traversed newest-first; conjunctions are
+postings intersections; disjunctions are unions; phrase queries are
+intersections with positional constraints; results are returned in reverse
+chronological order (descending docid).  No relevance scoring (paper §3).
+
+TPU adaptation (DESIGN.md §2): the paper's linear merge with early exit
+becomes (a) a chain walk that flattens each term's slice chain into a flat
+address vector, then (b) fully-vectorised sorted-set operations
+(`searchsorted` membership) — data-parallel instead of pointer-at-a-time.
+
+Internal list representation: ASCENDING uint32 arrays, deduped, padded at
+the end with INVALID (0xFFFFFFFF, which sorts above every valid docid, so
+padded arrays remain sorted and searchsorted-safe).  Public results are
+flipped to descending (reverse-chronological) at the API edge.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import postings as post
+from repro.core import slicepool
+from repro.core.pointers import PoolLayout
+
+INVALID = jnp.uint32(0xFFFFFFFF)
+
+
+def _compact(values, keep, fill=INVALID):
+    """Stable-compact ``values[keep]`` to the front; pad with ``fill``."""
+    n = values.shape[0]
+    idx = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    out = jnp.full((n,), fill, values.dtype)
+    out = out.at[jnp.where(keep, idx, n)].set(values, mode="drop")
+    return out, jnp.sum(keep.astype(jnp.int32))
+
+
+def desc_to_asc(desc, n):
+    """Flip the valid prefix of a descending array; INVALID padding at end."""
+    m = desc.shape[0]
+    idx = n - 1 - jnp.arange(m)
+    vals = desc[jnp.clip(idx, 0, m - 1)]
+    return jnp.where(jnp.arange(m) < n, vals, INVALID)
+
+
+def asc_to_desc(asc, n):
+    return desc_to_asc(asc, n)  # same index reversal
+
+
+def dedup_asc(xs):
+    """Remove duplicates from an ascending INVALID-padded array."""
+    prev = jnp.concatenate([jnp.array([INVALID], xs.dtype), xs[:-1]])
+    keep = (xs != INVALID) & (xs != prev)
+    return _compact(xs, keep)
+
+
+def member_asc(xs, ys):
+    """For each x in xs, is x present in ascending INVALID-padded ys?"""
+    pos = jnp.searchsorted(ys, xs)
+    pos = jnp.minimum(pos, ys.shape[0] - 1)
+    return (ys[pos] == xs) & (xs != INVALID)
+
+
+def intersect_asc(a, na, b, nb):
+    keep = member_asc(a, b)
+    return _compact(a, keep)
+
+
+def union_asc(a, na, b, nb):
+    merged = jnp.sort(jnp.concatenate([a, b]))
+    out, n = dedup_asc(merged)
+    return out[: a.shape[0]], jnp.minimum(n, a.shape[0])
+
+
+class QueryEngine(NamedTuple):
+    """Jitted query functions bound to a (layout, max_slices, max_len)."""
+    postings_desc: callable     # (state, term) -> (uint32[max_len], n)
+    docids_asc: callable        # (state, term) -> (uint32[max_len], n)
+    conjunctive: callable       # (state, terms[max_q], n_terms) -> (desc, n)
+    disjunctive: callable       # (state, terms[max_q], n_terms) -> (desc, n)
+    phrase: callable            # (state, t1, t2) -> (desc ids, n)
+    read_all: callable          # (state, terms[max_q], n_terms) -> checksum
+    topk_conjunctive: callable  # (state, terms, n_terms, k) -> (desc[k], n)
+
+
+def make_engine(layout: PoolLayout, max_slices: int, max_len: int,
+                max_query_len: int = 8) -> QueryEngine:
+    materialize = slicepool.make_materializer(layout, max_slices, max_len)
+
+    @jax.jit
+    def postings_desc(state, term):
+        return materialize(state, term)
+
+    @jax.jit
+    def docids_asc(state, term):
+        plist, n = materialize(state, term)  # reverse-chronological
+        ids = post.docid(plist)
+        ids = jnp.where(jnp.arange(max_len) < n, ids, INVALID)
+        asc = desc_to_asc(ids, n)  # ascending docids, may have duplicates
+        return dedup_asc(asc)
+
+    def _gather_terms(state, terms):
+        return jax.vmap(lambda t: docids_asc(state, t))(terms)
+
+    @jax.jit
+    def conjunctive(state, terms, n_terms):
+        ids, ns = _gather_terms(state, terms)
+
+        def body(i, carry):
+            acc, na = carry
+            use = i < n_terms
+            nxt, nn = intersect_asc(acc, na, ids[i], ns[i])
+            acc = jnp.where(use, nxt, acc)
+            na = jnp.where(use, nn, na)
+            return acc, na
+
+        acc, na = jax.lax.fori_loop(1, max_query_len, body, (ids[0], ns[0]))
+        return asc_to_desc(acc, na), na
+
+    @jax.jit
+    def disjunctive(state, terms, n_terms):
+        ids, ns = _gather_terms(state, terms)
+
+        def body(i, carry):
+            acc, na = carry
+            use = i < n_terms
+            nxt, nn = union_asc(acc, na, ids[i], ns[i])
+            acc = jnp.where(use, nxt, acc)
+            na = jnp.where(use, nn, na)
+            return acc, na
+
+        acc, na = jax.lax.fori_loop(1, max_query_len, body, (ids[0], ns[0]))
+        return asc_to_desc(acc, na), na
+
+    @jax.jit
+    def phrase(state, t1, t2):
+        """Docs where t2 appears at position(t1) + 1 (paper: intersection
+        with positional constraints).  Works on raw packed postings: the
+        posting uint32 orders by (docid, position)."""
+        p1, n1 = materialize(state, t1)
+        p2, n2 = materialize(state, t2)
+        p1 = jnp.where(jnp.arange(max_len) < n1, p1, INVALID)
+        p2 = jnp.where(jnp.arange(max_len) < n2, p2, INVALID)
+        a1 = desc_to_asc(p1, n1)
+        a2 = desc_to_asc(p2, n2)
+        want = jnp.where(a1 != INVALID, a1 + jnp.uint32(1), INVALID)
+        hit = member_asc(want, a2)
+        ids = jnp.where(hit, post.docid(a1), INVALID)
+        ids = jnp.sort(ids)  # ascending, INVALID at end
+        asc, n = dedup_asc(ids)
+        return asc_to_desc(asc, n), n
+
+    @jax.jit
+    def read_all(state, terms, n_terms):
+        """End-to-end read of all postings for all query terms — the
+        paper's C_T* microbenchmark body.  Returns a checksum so XLA
+        cannot dead-code the reads."""
+        def body(i, acc):
+            plist, n = materialize(state, terms[i])
+            ok = i < n_terms
+            s = jnp.sum(plist.astype(jnp.float64 if False else jnp.uint32))
+            return acc + jnp.where(ok, s, jnp.uint32(0))
+        return jax.lax.fori_loop(0, max_query_len, body, jnp.uint32(0))
+
+    @functools.partial(jax.jit, static_argnums=(3,))
+    def topk_conjunctive(state, terms, n_terms, k):
+        desc, n = conjunctive(state, terms, n_terms)
+        return desc[:k], jnp.minimum(n, k)
+
+    return QueryEngine(postings_desc, docids_asc, conjunctive,
+                       disjunctive, phrase, read_all, topk_conjunctive)

@@ -1,0 +1,224 @@
+"""Segment lifecycle (paper §3.1): active -> optimized read-only.
+
+Earlybird keeps ~12 segments; at most one is mutable.  When the active
+segment fills, it is converted to an optimized read-only structure: the
+paper applies "a variant of PForDelta after reversing the order of the
+postings".  Here:
+
+  * :func:`freeze` walks every term's slice chain once (host-side numpy —
+    this is an offline, off-the-query-path conversion, exactly as in
+    production) and produces a contiguous CSR postings store, ascending
+    (chronological) within each term.
+  * :func:`ForBlocks` implements a Frame-of-Reference/PForDelta-lite
+    block codec (128-gap blocks, per-block bit width) for the docid gaps —
+    the paper's "variant of PForDelta".
+  * :class:`SegmentSet` searches newest-active + frozen segments and merges
+    results in reverse-chronological order, using per-segment docid bases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import postings as post
+from repro.core.index import ActiveSegment
+from repro.core.pointers import NULL, PoolLayout, decode_host
+
+
+# ---------------------------------------------------------------------------
+# Chain walk in numpy (offline freeze path)
+# ---------------------------------------------------------------------------
+def _walk_chain_np(layout: PoolLayout, heap: np.ndarray, tail: int,
+                   out: List[int]) -> None:
+    base_tbl = layout.pool_base
+    sizes = layout.slice_sizes
+    ptr = tail
+    while ptr != int(NULL):
+        pool, sl, off = decode_host(layout, ptr)
+        base = base_tbl[pool] + sl * sizes[pool]
+        start = 1 if pool > 0 else 0
+        out.extend(heap[base + start: base + off + 1][::-1].tolist())
+        ptr = int(heap[base]) if pool > 0 else int(NULL)
+
+
+@dataclasses.dataclass
+class FrozenSegment:
+    """Contiguous CSR postings store (ascending chronological per term)."""
+    offsets: np.ndarray       # int64[V+1]
+    data: np.ndarray          # uint32[total]
+    n_docs: int
+    doc_base: int = 0
+
+    def postings(self, term: int) -> np.ndarray:
+        return self.data[self.offsets[term]: self.offsets[term + 1]]
+
+    def docids_desc(self, term: int) -> np.ndarray:
+        p = self.postings(term)
+        ids = (p >> np.uint32(post.POS_BITS))[::-1]
+        return ids[np.concatenate([[True], ids[1:] != ids[:-1]])] \
+            if ids.size else ids
+
+    def term_freqs(self) -> np.ndarray:
+        return np.diff(self.offsets).astype(np.int64)
+
+    @property
+    def total_postings(self) -> int:
+        return int(self.offsets[-1])
+
+
+def freeze(seg: ActiveSegment, doc_base: int = 0) -> FrozenSegment:
+    heap = np.asarray(seg.state.heap)
+    tail = np.asarray(seg.state.tail)
+    freq = np.asarray(seg.state.freq)
+    V = seg.vocab_size
+    offsets = np.zeros(V + 1, np.int64)
+    offsets[1:] = np.cumsum(freq)
+    data = np.zeros(int(offsets[-1]), np.uint32)
+    for t in np.nonzero(freq)[0]:
+        buf: List[int] = []
+        _walk_chain_np(seg.layout, heap, int(tail[t]), buf)
+        # chain walk yields reverse-chronological; store chronological.
+        data[offsets[t]: offsets[t + 1]] = np.asarray(buf, np.uint32)[::-1]
+    return FrozenSegment(offsets=offsets, data=data,
+                         n_docs=seg.next_docid, doc_base=doc_base)
+
+
+# ---------------------------------------------------------------------------
+# FOR / PForDelta-lite block codec for docid gaps
+# ---------------------------------------------------------------------------
+BLOCK = 128
+
+
+@dataclasses.dataclass
+class ForBlocks:
+    widths: np.ndarray   # uint8[n_blocks] bits per value
+    firsts: np.ndarray   # uint32[n_blocks] first raw value per block
+    payload: np.ndarray  # uint64 packed little-endian bit stream
+    n: int
+
+    @staticmethod
+    def encode(values: np.ndarray) -> "ForBlocks":
+        values = values.astype(np.uint64)
+        n = len(values)
+        n_blocks = max(1, -(-n // BLOCK))
+        widths = np.zeros(n_blocks, np.uint8)
+        firsts = np.zeros(n_blocks, np.uint32)
+        bits: List[Tuple[int, int]] = []  # (value, width) stream
+        for b in range(n_blocks):
+            chunk = values[b * BLOCK:(b + 1) * BLOCK]
+            if chunk.size == 0:
+                continue
+            firsts[b] = chunk[0]
+            gaps = np.diff(chunk.astype(np.int64)).astype(np.uint64)
+            w = int(gaps.max()).bit_length() if gaps.size else 0
+            widths[b] = w
+            bits.extend((int(g), w) for g in gaps)
+        total_bits = sum(w for _, w in bits)
+        payload = np.zeros((total_bits + 63) // 64 + 1, np.uint64)
+        pos = 0
+        for v, w in bits:
+            if w == 0:
+                continue
+            word, off = pos >> 6, pos & 63
+            payload[word] |= np.uint64((v << off) & 0xFFFFFFFFFFFFFFFF)
+            if off + w > 64:
+                payload[word + 1] |= np.uint64(v >> (64 - off))
+            pos += w
+        return ForBlocks(widths, firsts, payload, n)
+
+    def decode(self) -> np.ndarray:
+        out = np.zeros(self.n, np.uint64)
+        pos = 0
+        i = 0
+        for b in range(len(self.widths)):
+            cnt = min(BLOCK, self.n - b * BLOCK)
+            if cnt <= 0:
+                break
+            out[i] = self.firsts[b]
+            w = int(self.widths[b])
+            acc = int(self.firsts[b])
+            for j in range(1, cnt):
+                if w == 0:
+                    g = 0
+                else:
+                    word, off = pos >> 6, pos & 63
+                    v = int(self.payload[word]) >> off
+                    if off + w > 64:
+                        v |= int(self.payload[word + 1]) << (64 - off)
+                    g = v & ((1 << w) - 1)
+                    pos += w
+                acc += g
+                out[i + j] = acc
+            i += cnt
+        return out
+
+    @property
+    def compressed_bytes(self) -> int:
+        return (self.widths.nbytes + self.firsts.nbytes
+                + self.payload.nbytes)
+
+
+def compress_segment(seg: FrozenSegment) -> Tuple[List[Optional[ForBlocks]], int]:
+    """Gap-compress each term's docid stream; returns (codecs, bytes)."""
+    codecs: List[Optional[ForBlocks]] = []
+    total = 0
+    for t in range(len(seg.offsets) - 1):
+        p = seg.postings(t)
+        if p.size == 0:
+            codecs.append(None)
+            continue
+        c = ForBlocks.encode(p.astype(np.uint64))
+        codecs.append(c)
+        total += c.compressed_bytes
+    return codecs, total
+
+
+# ---------------------------------------------------------------------------
+# Multi-segment search
+# ---------------------------------------------------------------------------
+class SegmentSet:
+    """At most one active segment + N frozen ones (paper §3.1)."""
+
+    def __init__(self, layout: PoolLayout, vocab_size: int,
+                 docs_per_segment: int, max_segments: int = 12):
+        self.layout = layout
+        self.vocab_size = vocab_size
+        self.docs_per_segment = docs_per_segment
+        self.max_segments = max_segments
+        self.frozen: List[FrozenSegment] = []
+        self.active = ActiveSegment(layout, vocab_size,
+                                    max_docs=docs_per_segment)
+        self._doc_base = 0
+
+    def ingest(self, docs, **kw) -> None:
+        self.active.ingest(docs, **kw)
+        if self.active.is_full:
+            self.rollover()
+
+    def rollover(self) -> FrozenSegment:
+        fz = freeze(self.active, doc_base=self._doc_base)
+        self.frozen.append(fz)
+        if len(self.frozen) > self.max_segments - 1:
+            self.frozen.pop(0)  # oldest segment retired (paper: bounded set)
+        self._doc_base += self.active.next_docid
+        self.active = ActiveSegment(self.layout, self.vocab_size,
+                                    max_docs=self.docs_per_segment)
+        return fz
+
+    def history_freqs(self) -> np.ndarray:
+        """H(t) from the most recent frozen segment (paper §7)."""
+        if not self.frozen:
+            return np.zeros(self.vocab_size, np.int64)
+        return self.frozen[-1].term_freqs()
+
+    def search_term_desc(self, term: int, engine, limit: int) -> np.ndarray:
+        """Global docids (descending, newest segment first)."""
+        out = []
+        plist, n = engine.docids_asc(self.active.state, term)
+        ids = np.asarray(plist)[: int(n)][::-1].astype(np.int64) + self._doc_base
+        out.append(ids)
+        for fz in reversed(self.frozen):
+            out.append(fz.docids_desc(term).astype(np.int64) + fz.doc_base)
+        return np.concatenate(out)[:limit] if out else np.zeros(0, np.int64)

@@ -1,0 +1,216 @@
+"""Functional slice-pool allocator (paper §3.2-3.3), jit/scan friendly.
+
+The allocator state is a pytree of fixed-shape arrays so the whole ingest
+loop runs as a single ``jax.lax.scan`` on device:
+
+  * ``heap``      — one flat uint32 array holding every pool back-to-back
+                    (pool p occupies ``[base_p, base_p + slices_p * 2**z_p)``).
+  * ``watermark`` — next free slice index per pool (bump allocation: slices
+                    are fixed-size per pool, so allocation is O(1) and there
+                    is no fragmentation — paper §10).
+  * ``tail``      — per-term packed pointer to the most recently written
+                    slot (the paper's dictionary "tail" pointer: where the
+                    next posting goes and where query evaluation begins).
+  * ``freq``      — per-term posting count.
+  * ``overflow``  — sticky bit; inserts become no-ops when a pool is
+                    exhausted (tests assert it stays False).
+
+Zero-copy invariant (paper §3.2): a posting, once written, is never moved.
+The only mutations are bump-pointer watermark increments and single-slot
+writes, which XLA performs in place inside the scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pointers as ptr_mod
+from repro.core.pointers import NULL, PoolLayout
+
+
+class PoolState(NamedTuple):
+    heap: jax.Array       # uint32[total_slots]
+    watermark: jax.Array  # int32[P] next free slice per pool
+    tail: jax.Array       # uint32[V]
+    freq: jax.Array       # int32[V]
+    overflow: jax.Array   # bool[]
+
+
+def init_state(layout: PoolLayout, vocab_size: int) -> PoolState:
+    return PoolState(
+        heap=jnp.zeros((layout.total_slots,), jnp.uint32),
+        watermark=jnp.zeros((layout.num_pools,), jnp.int32),
+        tail=jnp.full((vocab_size,), NULL, jnp.uint32),
+        freq=jnp.zeros((vocab_size,), jnp.int32),
+        overflow=jnp.asarray(False),
+    )
+
+
+def memory_slots_used(layout: PoolLayout, state: PoolState) -> int:
+    """Allocated slots = paper's empirical memory cost ``C_M*``."""
+    import numpy as np
+    wm = np.asarray(state.watermark, np.int64)
+    return int(np.sum(wm * np.asarray(layout.slice_sizes, np.int64)))
+
+
+def _insert_one(layout: PoolLayout, tbl, caps, state: PoolState,
+                term, posting, start_pool, valid) -> PoolState:
+    """Branchless single-posting insert (one scan step)."""
+    pb = layout.pool_bits
+    P = layout.num_pools
+    total = layout.total_slots
+    oob = jnp.uint32(total)  # writes with mode="drop" go here when disabled
+
+    t = state.tail[term]
+    new = ptr_mod.is_null(t)
+    pool, sl, off = ptr_mod.decode(tbl, pb, t)
+    cap = tbl["slice_size"][pool]
+    full = (~new) & (off == cap - jnp.uint32(1))
+    need_alloc = (new | full) & valid
+
+    alloc_pool = jnp.where(
+        new, start_pool.astype(jnp.uint32),
+        jnp.minimum(pool + jnp.uint32(1), jnp.uint32(P - 1)))
+    slice_new = state.watermark[alloc_pool].astype(jnp.uint32)
+    can_alloc = slice_new < caps[alloc_pool]
+    ok = valid & (~need_alloc | can_alloc)
+    do_alloc = need_alloc & ok
+
+    watermark = state.watermark.at[
+        jnp.where(do_alloc, alloc_pool.astype(jnp.int32), P)
+    ].add(1, mode="drop")
+
+    has_ptr_slot = alloc_pool > jnp.uint32(0)
+    w_pool = jnp.where(do_alloc, alloc_pool, pool)
+    w_slice = jnp.where(do_alloc, slice_new, sl)
+    w_off = jnp.where(
+        do_alloc,
+        jnp.where(has_ptr_slot, jnp.uint32(1), jnp.uint32(0)),
+        off + jnp.uint32(1))
+
+    heap = state.heap
+    # previous-pointer write at slot 0 of a fresh slice (pools > 0 only).
+    prev_addr = ptr_mod.to_addr(tbl, alloc_pool, slice_new, jnp.uint32(0))
+    write_prev = do_alloc & has_ptr_slot
+    prev_val = jnp.where(new, jnp.uint32(NULL), t)
+    heap = heap.at[jnp.where(write_prev, prev_addr, oob)].set(
+        prev_val, mode="drop")
+    # the posting itself.
+    addr = ptr_mod.to_addr(tbl, w_pool, w_slice, w_off)
+    heap = heap.at[jnp.where(ok, addr, oob)].set(
+        posting.astype(jnp.uint32), mode="drop")
+
+    new_tail = ptr_mod.encode(tbl, pb, w_pool, w_slice, w_off)
+    tail = state.tail.at[term].set(jnp.where(ok, new_tail, t))
+    freq = state.freq.at[term].add(ok.astype(jnp.int32))
+    overflow = state.overflow | (valid & need_alloc & ~can_alloc)
+    return PoolState(heap, watermark, tail, freq, overflow)
+
+
+def make_ingest_fn(layout: PoolLayout, vocab_size: int):
+    """Build a jitted ``ingest(state, terms, postings, start_pools, valid)``.
+
+    ``terms``/``postings`` are flat uint32 streams (one entry per term
+    occurrence, already positional-encoded via
+    :func:`repro.core.postings.pack`).  ``start_pools`` implements the §7
+    SP policies (all zeros == ``SP(z_0)``).  ``valid`` masks padding.
+    """
+    tbl = layout.tables()
+    caps = jnp.asarray(
+        [layout.slices_per_pool[p] for p in range(layout.num_pools)],
+        jnp.uint32)
+
+    def step(state, xs):
+        term, posting, start_pool, valid = xs
+        return _insert_one(layout, tbl, caps, state, term, posting,
+                           start_pool, valid), None
+
+    @jax.jit
+    def ingest(state: PoolState, terms, postings,
+               start_pools=None, valid=None) -> PoolState:
+        n = terms.shape[0]
+        if start_pools is None:
+            start_pools = jnp.zeros((n,), jnp.uint32)
+        if valid is None:
+            valid = jnp.ones((n,), bool)
+        state, _ = jax.lax.scan(
+            step, state,
+            (terms.astype(jnp.uint32), postings.astype(jnp.uint32),
+             start_pools.astype(jnp.uint32), valid))
+        return state
+
+    return ingest
+
+
+# ---------------------------------------------------------------------------
+# Chain walking / materialisation.
+# ---------------------------------------------------------------------------
+def make_chain_walker(layout: PoolLayout, max_slices: int):
+    """Build ``walk(state, term) -> (base, data_start, last_off, n_slices)``.
+
+    Walks the backwards-linked slice chain newest-first, reading each
+    slice's previous-pointer from its slot 0.  ``max_slices`` is a static
+    bound (use :func:`repro.core.analytical.slices_needed` for the corpus
+    max frequency).
+    """
+    tbl = layout.tables()
+    pb = layout.pool_bits
+
+    def walk(state: PoolState, term):
+        def body(i, carry):
+            p, bases, starts, lasts, count = carry
+            pool, sl, off = ptr_mod.decode(tbl, pb, p)
+            live = ~ptr_mod.is_null(p)
+            base = ptr_mod.to_addr(tbl, pool, sl, jnp.uint32(0))
+            data_start = jnp.where(pool > 0, jnp.uint32(1), jnp.uint32(0))
+            bases = bases.at[i].set(jnp.where(live, base, 0))
+            starts = starts.at[i].set(jnp.where(live, data_start, 0))
+            lasts = lasts.at[i].set(jnp.where(live, off, 0))
+            count = count + live.astype(jnp.int32)
+            nxt = jnp.where(pool > 0, state.heap[base], jnp.uint32(NULL))
+            p = jnp.where(live, nxt, p)
+            return p, bases, starts, lasts, count
+
+        init = (
+            state.tail[term],
+            jnp.zeros((max_slices,), jnp.uint32),
+            jnp.zeros((max_slices,), jnp.uint32),
+            jnp.zeros((max_slices,), jnp.uint32),
+            jnp.int32(0),
+        )
+        _, bases, starts, lasts, count = jax.lax.fori_loop(
+            0, max_slices, body, init)
+        return bases, starts, lasts, count
+
+    return walk
+
+
+def make_materializer(layout: PoolLayout, max_slices: int, max_len: int):
+    """Build ``materialize(state, term) -> (postings_desc, length)``.
+
+    Returns the term's postings in reverse-chronological order (the paper's
+    traversal order), padded to ``max_len``.  Two-phase: O(#slices) chain
+    walk, then one fully-vectorised gather — this is the TPU-friendly
+    "flatten the chain, then stream" pattern (DESIGN.md §6.2).
+    """
+    walk = make_chain_walker(layout, max_slices)
+
+    def materialize(state: PoolState, term):
+        bases, starts, lasts, n = walk(state, term)
+        live = jnp.arange(max_slices) < n
+        lens = jnp.where(live, lasts - starts + 1, 0).astype(jnp.int32)
+        cum = jnp.cumsum(lens)
+        total = jnp.minimum(cum[-1], max_len)
+        j = jnp.arange(max_len, dtype=jnp.int32)
+        s = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+        s = jnp.minimum(s, max_slices - 1)
+        before = jnp.where(s > 0, cum[jnp.maximum(s - 1, 0)], 0)
+        within = (j - before).astype(jnp.uint32)
+        addr = bases[s] + lasts[s] - within
+        vals = state.heap[addr]
+        vals = jnp.where(j < total, vals, jnp.uint32(0))
+        return vals, total
+
+    return materialize

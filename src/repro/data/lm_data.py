@@ -1,0 +1,51 @@
+"""Stateless-resumable LM token pipeline.
+
+Batches are a pure function of (step, host) via fold_in — after a failure
+the restored step re-generates exactly the batches that would have been
+consumed, so data order is deterministic across restarts (the pipeline
+needs NO checkpointing of its own).  Token distribution is Zipf(alpha) —
+the same statistics the paper's postings study assumes, so LM examples and
+the search core share a data model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDataConfig:
+    vocab: int
+    batch: int
+    seq_len: int
+    alpha: float = 1.0
+    seed: int = 0
+
+
+def _zipf_cdf(vocab: int, alpha: float) -> np.ndarray:
+    p = np.arange(1, vocab + 1, dtype=np.float64) ** -alpha
+    p /= p.sum()
+    return np.cumsum(p)
+
+
+def make_batch_fn(cfg: LMDataConfig):
+    cdf = jnp.asarray(_zipf_cdf(cfg.vocab, cfg.alpha), jnp.float32)
+    base = jax.random.PRNGKey(cfg.seed)
+
+    @jax.jit
+    def batch_at(step):
+        key = jax.random.fold_in(base, step)
+        u = jax.random.uniform(key, (cfg.batch, cfg.seq_len))
+        toks = jnp.searchsorted(cdf, u).astype(jnp.int32)
+        return jnp.clip(toks, 0, cfg.vocab - 1)
+
+    return batch_at
+
+
+def batches(cfg: LMDataConfig, start_step: int, n_steps: int):
+    fn = make_batch_fn(cfg)
+    for s in range(start_step, start_step + n_steps):
+        yield fn(jnp.int32(s))

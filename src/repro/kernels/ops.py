@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (CPU CI / this container executes
+the kernel bodies in Python for correctness); on a TPU backend the same
+calls compile to Mosaic.  The jnp oracles live in ref.py and back both the
+allclose tests and the dry-run lowering path (DESIGN.md: kernels are the
+TPU target, the jnp path is the semantics).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.embedding_bag import embedding_bag as _embedding_bag
+from repro.kernels.paged_attention import PAGE
+from repro.kernels.paged_attention import paged_attention as _paged_attention
+from repro.kernels.postings_intersect import intersect_mask as _intersect_mask
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def paged_attention(q, k_heap, v_heap, page_table, lengths, *,
+                    page: int = PAGE, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _paged_attention(q, k_heap, v_heap, page_table, lengths,
+                            page=page, interpret=interpret)
+
+
+def embedding_bag(table, indices, offsets, *, mode: str = "sum",
+                  interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _embedding_bag(table, indices, offsets, mode=mode,
+                          interpret=interpret)
+
+
+def intersect_mask(a, b, *, ta: int = 256, tb: int = 256, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _intersect_mask(a, b, ta=ta, tb=tb, interpret=interpret)
+
+
+__all__ = ["paged_attention", "embedding_bag", "intersect_mask", "ref",
+           "PAGE"]

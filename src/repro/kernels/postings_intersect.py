@@ -1,0 +1,116 @@
+"""Pallas TPU blocked sorted-set intersection (the paper's conjunctive-
+query hot path, §3.1/§8).
+
+TPU adaptation of the paper's linear merge: instead of pointer-at-a-time
+compares, both lists stream through VMEM in fixed tiles and each
+(a_tile, b_tile) pair is tested with ONE vectorised TA x TB equality
+matrix on the VPU; tile advance follows the classic two-pointer rule on
+tile maxima.  Total steps <= n_a_tiles + n_b_tiles.
+
+Inputs are ASCENDING uint32 arrays padded with INVALID (0xFFFFFFFF) — the
+query-engine representation.  Output is an int32 membership mask over
+``a`` (1 where a[i] is valid and present in b); compaction happens in the
+jnp caller (repro.core.query._compact).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INVALID = 0xFFFFFFFF
+
+
+def _kernel(a_hbm, b_hbm, o_hbm, a_buf, b_buf, m_buf, sem_a, sem_b, sem_o,
+            *, ta: int, tb: int, na_tiles: int, nb_tiles: int):
+    def copy_a(ia):
+        return pltpu.make_async_copy(
+            a_hbm.at[pl.ds(ia * ta, ta)], a_buf, sem_a)
+
+    def copy_b(ib):
+        return pltpu.make_async_copy(
+            b_hbm.at[pl.ds(ib * tb, tb)], b_buf, sem_b)
+
+    def flush(ia):
+        cp = pltpu.make_async_copy(m_buf, o_hbm.at[pl.ds(ia * ta, ta)],
+                                   sem_o)
+        cp.start()
+        cp.wait()
+
+    copy_a(0).start()
+    copy_a(0).wait()
+    copy_b(0).start()
+    copy_b(0).wait()
+    m_buf[...] = jnp.zeros((ta,), jnp.int32)
+
+    def step(_, carry):
+        ia, ib = carry
+        live = (ia < na_tiles)
+        a = a_buf[...]
+        b = b_buf[...]
+        eq = (a[:, None] == b[None, :]) & (a[:, None] != jnp.uint32(INVALID))
+        hits = jnp.max(eq.astype(jnp.int32), axis=1)
+        m_buf[...] = jnp.where(live, jnp.maximum(m_buf[...], hits),
+                               m_buf[...])
+        a_max = a[ta - 1]
+        b_max = b[tb - 1]
+        b_done = ib >= nb_tiles - 1
+        adv_a = live & ((a_max <= b_max) | b_done)
+        adv_b = live & ((b_max <= a_max) & ~b_done)
+
+        @pl.when(adv_a)
+        def _():
+            flush(ia)
+            m_buf[...] = jnp.zeros((ta,), jnp.int32)
+
+        ia2 = ia + adv_a.astype(jnp.int32)
+        ib2 = ib + adv_b.astype(jnp.int32)
+
+        @pl.when(adv_a & (ia2 < na_tiles))
+        def _():
+            cp = copy_a(ia2)
+            cp.start()
+            cp.wait()
+
+        @pl.when(adv_b)
+        def _():
+            cp = copy_b(ib2)
+            cp.start()
+            cp.wait()
+
+        return ia2, ib2
+
+    jax.lax.fori_loop(0, na_tiles + nb_tiles, step, (0, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("ta", "tb", "interpret"))
+def intersect_mask(a, b, *, ta: int = 256, tb: int = 256,
+                   interpret: bool = True):
+    """Membership mask of ascending INVALID-padded ``a`` in ``b``."""
+    na, nb = a.shape[0], b.shape[0]
+    assert na % ta == 0 and nb % tb == 0, (na, ta, nb, tb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+                  pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((ta,), jnp.uint32),
+            pltpu.VMEM((tb,), jnp.uint32),
+            pltpu.VMEM((ta,), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, ta=ta, tb=tb,
+                          na_tiles=na // ta, nb_tiles=nb // tb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((na,), jnp.int32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_heap, v_heap, page_table, lengths,
+                        page: int = 64):
+    """Decode attention through a page table.
+
+    q: [B, Hkv, G, D]; k_heap/v_heap: [Hkv, slots, D];
+    page_table: int32[B, NP] page ids (-1 pad); lengths: int32[B].
+    Returns [B, Hkv, G, D] fp32.
+    """
+    B, Hkv, G, D = q.shape
+    NP = page_table.shape[1]
+    slots = (jnp.maximum(page_table, 0)[:, :, None] * page
+             + jnp.arange(page)[None, None, :]).reshape(B, NP * page)
+    k = jnp.take(k_heap, slots, axis=1)        # [Hkv, B, T, D]
+    v = jnp.take(v_heap, slots, axis=1)
+    k = jnp.transpose(k, (1, 0, 2, 3)).astype(jnp.float32)  # [B, Hkv, T, D]
+    v = jnp.transpose(v, (1, 0, 2, 3)).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhtd->bhgt", q.astype(jnp.float32), k)
+    s = s * (D ** -0.5)
+    t_pos = jnp.arange(NP * page)[None, None, None, :]
+    mask = t_pos < lengths[:, None, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)        # all-masked rows -> 0
+    return jnp.einsum("bhgt,bhtd->bhgd", p, v)
+
+
+def embedding_bag_ref(table, indices, offsets, mode: str = "sum"):
+    """CSR embedding bag: bags b = rows indices[offsets[b]:offsets[b+1]].
+
+    table: [R, D]; indices: int32[N]; offsets: int32[B+1] -> [B, D].
+    """
+    B = offsets.shape[0] - 1
+    n = indices.shape[0]
+    seg = jnp.searchsorted(offsets[1:], jnp.arange(n), side="right")
+    rows = jnp.take(table, indices, axis=0, mode="clip")
+    out = jax.ops.segment_sum(rows, seg, num_segments=B)
+    if mode == "mean":
+        cnt = (offsets[1:] - offsets[:-1]).astype(table.dtype)
+        out = out / jnp.maximum(cnt, 1)[:, None]
+    return out
+
+
+def intersect_mask_ref(a, b, invalid: int = 0xFFFFFFFF):
+    """Membership mask: 1 where a[i] (valid) appears in b. Both ascending,
+    padded with ``invalid`` at the end."""
+    pos = jnp.searchsorted(b, a)
+    pos = jnp.minimum(pos, b.shape[0] - 1)
+    hit = (b[pos] == a) & (a != jnp.uint32(invalid))
+    return hit.astype(jnp.int32)

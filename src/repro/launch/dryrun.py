@@ -1,0 +1,444 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (device count locks on
+# first backend init).  Everything below may import jax.
+
+import argparse            # noqa: E402
+import functools           # noqa: E402
+import json                # noqa: E402
+import subprocess          # noqa: E402
+import sys                 # noqa: E402
+import time                # noqa: E402
+
+import jax                 # noqa: E402
+import jax.numpy as jnp    # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import registry                          # noqa: E402
+from repro.configs.base import LMConfig                     # noqa: E402
+from repro.dist.sharding import Rules, tree_shardings, use_rules  # noqa: E402
+from repro.launch import mesh as mesh_lib                   # noqa: E402
+from repro.launch import roofline as RL                     # noqa: E402
+from repro.models import transformer as T                   # noqa: E402
+from repro.train import steps as S                          # noqa: E402
+from repro.train.optimizer import AdamW                     # noqa: E402
+
+import dataclasses         # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Per-cell rules (logical axis -> mesh axes), honoring fit/hillclimb knobs
+# ---------------------------------------------------------------------------
+def rules_for(mesh, entry, spec, ov) -> Rules:
+    dp = mesh_lib.batch_axes_for(mesh, max(spec.global_batch, 1))
+    full_dp = (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+    cfg = entry.config
+    fsdp = ov.get("fsdp")
+    if fsdp is None:
+        fsdp = bool(getattr(cfg, "fsdp", False))
+        if entry.family == "lm" and spec.kind == "decode":
+            # serving: weights TP over 'model'; add FSDP only when the
+            # model-sharded weights alone would blow past HBM (grok-1).
+            param_bytes = cfg.param_count * 2
+            fsdp = param_bytes / mesh.shape["model"] > 8e9
+    rows = ov.get("rows")
+    if rows is None:
+        rows = ("dp_model" if getattr(cfg, "total_rows", 0) > 5e7
+                else "model")
+    table = {
+        "batch": dp,
+        "fsdp": full_dp if fsdp else None,
+        "model": "model",
+        "kv_seq": "model",
+        "seq": "model" if ov.get("seq_sharded") else None,
+        "edges": full_dp,
+        "rows": (full_dp + ("model",)) if rows == "dp_model" else ("model",),
+    }
+    if ov.get("scheme") == "fsdp_pure":
+        # Hillclimb scheme: no tensor parallelism — batch and parameter
+        # shards span BOTH ici axes ('data','model'); the only collectives
+        # left are the per-step gradient reduce + FSDP weight all-gathers.
+        # Wins when d_model is small relative to the chip count (TP's
+        # per-layer activation all-reduces dominate). See §Perf.
+        both = ("data", "model")
+        if spec.global_batch % (mesh.shape["data"]
+                                * mesh.shape["model"]) == 0:
+            table["batch"] = both
+        table["model"] = None
+        table["fsdp"] = both
+        table["kv_seq"] = None
+    return Rules(mesh=mesh, table=table)
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Build (step_fn, example_args, in_shardings, donate) per cell
+# ---------------------------------------------------------------------------
+def build_cell(arch: str, shape: str, mesh, ov):
+    entry = registry.get(arch)
+    spec = registry.get_shape(arch, shape)
+    cfg = entry.config
+    # unroll=True (default): lax.scan bodies are costed once by XLA's
+    # cost_analysis regardless of trip count, so roofline numbers need the
+    # unrolled module.  --set unroll=False records the scan (runtime) form.
+    unroll = ov.get("unroll", True)
+    if hasattr(cfg, "unroll_layers"):
+        cfg = dataclasses.replace(cfg, unroll_layers=unroll)
+    if hasattr(cfg, "unroll_seq"):
+        cfg = dataclasses.replace(cfg, unroll_seq=unroll)
+    for k in ("n_microbatches", "remat", "moe_ep_pad",
+              "capacity_factor", "kv_quant"):
+        if k in ov and hasattr(cfg, k):
+            cfg = dataclasses.replace(cfg, **{k: ov[k]})
+    # fp32=True (roofline variant): XLA:CPU legalizes bf16 dots by
+    # inserting f32 converts of every weight/cache/activation — measured
+    # 62 GB of convert outputs on a 1 GB-cache decode step — which poisons
+    # 'bytes accessed'.  Lowering in fp32 removes the converts; the TPU
+    # bf16 traffic is then exactly bytes/2 (recorded as bytes_per_dev;
+    # raw fp32 count kept in bytes_per_dev_raw).
+    if ov.get("fp32") and hasattr(cfg, "param_dtype"):
+        cfg = dataclasses.replace(cfg, param_dtype="float32",
+                                  compute_dtype="float32")
+    rules = rules_for(mesh, entry, spec, ov)
+    sds = registry.input_specs(arch, shape)
+    notes = []
+
+    if entry.family == "lm":
+        return _build_lm(entry, cfg, spec, mesh, rules, sds, ov, notes)
+    if entry.family == "gnn":
+        return _build_gnn(entry, cfg, spec, mesh, rules, sds, ov, notes)
+    return _build_recsys(entry, cfg, spec, mesh, rules, sds, ov, notes)
+
+
+def _param_shardings(entry, cfg, rules, spec=None):
+    specs = S.param_specs_for(entry, cfg, rules.mesh.shape["model"])
+    return tree_shardings(rules, specs)
+
+
+def _build_lm(entry, cfg, spec, mesh, rules, sds, ov, notes):
+    key = jax.random.key(0)
+    p_sds = jax.eval_shape(functools.partial(T.init_lm, cfg), key)
+    p_sh = _param_shardings(entry, cfg, rules)
+    q_chunk = ov.get("q_chunk", 512)
+    batch_sh = rules.sharding(("batch", None))
+
+    if spec.kind == "train":
+        opt = AdamW(moment_dtype=ov.get("moment_dtype"))
+        o_sds = jax.eval_shape(opt.init, p_sds)
+        o_sh = type(o_sds)(step=_rep(mesh), mu=p_sh, nu=p_sh)
+        n_micro = ov.get("n_microbatches", cfg.n_microbatches)
+        step = S.make_lm_train_step(cfg, opt, n_microbatches=n_micro,
+                                    q_chunk=q_chunk,
+                                    unroll_accum=cfg.unroll_layers)
+        args = (p_sds, o_sds, sds["tokens"])
+        in_sh = (p_sh, o_sh, batch_sh)
+        return step, args, in_sh, (0, 1), rules, notes
+
+    if spec.kind == "prefill":
+        step = S.make_lm_prefill_step(cfg, q_chunk=q_chunk)
+        return step, (p_sds, sds["tokens"]), (p_sh, batch_sh), (), rules, notes
+
+    # decode: cache is carried state
+    cache_sds = jax.eval_shape(
+        functools.partial(T.init_decode_cache, cfg, spec.global_batch,
+                          spec.seq_len))
+    cache_specs = T.decode_cache_specs(cfg)
+    # NB: DecodeCache is itself a (Named)tuple — the is_leaf test must not
+    # swallow it, only the plain logical-spec tuples inside.
+    cache_sh = jax.tree.map(
+        lambda s: rules.sharding(s), cache_specs,
+        is_leaf=lambda s: s is None or (isinstance(s, tuple)
+                                        and not hasattr(s, "_fields")))
+    step = S.make_lm_decode_step(cfg)
+    args = (p_sds, cache_sds, sds["token"], sds["pos"])
+    in_sh = (p_sh, cache_sh, batch_sh, _rep(mesh))
+    return step, args, in_sh, (1,), rules, notes
+
+
+def _build_gnn(entry, cfg, spec, mesh, rules, sds, ov, notes):
+    dp_ways = mesh_lib.dp_extent(mesh)
+    e = sds["src"].shape[0]
+    e_pad = _pad_to(e, dp_ways * 8)
+    if e_pad != e:
+        notes.append(f"edges padded {e}->{e_pad} for {dp_ways}-way edge "
+                     f"sharding (masked in the data pipeline)")
+        for k in ("src", "dst"):
+            sds[k] = jax.ShapeDtypeStruct((e_pad,), jnp.int32)
+        sds["edge_dist"] = jax.ShapeDtypeStruct((e_pad,), jnp.float32)
+    edge_sh = rules.sharding(("edges",))
+    rep = _rep(mesh)
+    in_tree_sh = {k: (edge_sh if k in ("src", "dst", "edge_dist") else rep)
+                  for k in sds}
+    n_graphs = spec.extra("batch", 1)
+    key = jax.random.key(0)
+    d_feat = spec.extra("d_feat", cfg.d_feat_default)
+    from repro.models import schnet as G
+    p_sds = jax.eval_shape(
+        functools.partial(G.init_schnet, cfg, d_feat=d_feat), key)
+    p_sh = tree_shardings(rules, G.schnet_param_specs(cfg))
+    opt = AdamW()
+    o_sds = jax.eval_shape(opt.init, p_sds)
+    o_sh = type(o_sds)(step=rep, mu=p_sh, nu=p_sh)
+    step = S.make_gnn_train_step(cfg, opt, n_graphs=n_graphs)
+    return (step, (p_sds, o_sds, sds), (p_sh, o_sh, in_tree_sh), (0, 1),
+            rules, notes)
+
+
+def _build_recsys(entry, cfg, spec, mesh, rules, sds, ov, notes):
+    key = jax.random.key(0)
+    rep = _rep(mesh)
+    p_sds = jax.eval_shape(
+        functools.partial(S.init_params_for, entry, cfg), key)
+    p_sh = _param_shardings(entry, cfg, rules)
+    batch2 = rules.sharding(("batch", None))
+    batch1 = rules.sharding(("batch",))
+
+    if spec.kind == "retrieval":
+        step = S.make_recsys_retrieval_step(cfg)
+        cand_sh = rules.sharding(("edges",))   # dp-sharded candidate list
+        args = (p_sds, sds["user_sparse"], sds["cand_ids"])
+        return step, args, (p_sh, rep, cand_sh), (), rules, notes
+
+    in_tree_sh = {}
+    for k, v in sds.items():
+        if k in ("label", "hist_len"):
+            in_tree_sh[k] = batch1
+        elif k == "hist":
+            in_tree_sh[k] = rules.sharding(("batch", None, None))
+        else:
+            in_tree_sh[k] = batch2
+
+    if spec.kind == "train":
+        opt = AdamW()
+        o_sds = jax.eval_shape(opt.init, p_sds)
+        o_sh = type(o_sds)(step=rep, mu=p_sh, nu=p_sh)
+        step = S.make_recsys_train_step(
+            cfg, opt, n_microbatches=ov.get("n_microbatches", 1))
+        return (step, (p_sds, o_sds, sds), (p_sh, o_sh, in_tree_sh),
+                (0, 1), rules, notes)
+
+    step = S.make_recsys_forward(cfg)
+    return step, (p_sds, sds), (p_sh, in_tree_sh), (), rules, notes
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile + analyse one cell
+# ---------------------------------------------------------------------------
+def _compile_cell(arch, shape, mesh, merged):
+    step, args, in_sh, donate, rules, notes = build_cell(
+        arch, shape, mesh, merged)
+    with mesh, use_rules(rules):
+        jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled, notes
+
+
+def _probe_layer_counts(cfg) -> tuple:
+    """Two unrolled depths for linear-in-L extrapolation. Local/global
+    archs probe whole groups so the layer mix stays exact."""
+    if getattr(cfg, "local_global_ratio", 0):
+        g = cfg.local_global_ratio + 1
+        return g, 2 * g
+    return 1, 2
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, ov, variant="baseline"):
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    entry = registry.get(arch)
+    spec = registry.get_shape(arch, shape)
+    merged = registry.overrides(arch, shape)
+    merged.update(ov)
+    t0 = time.time()
+
+    probe = merged.pop("probe", False) and entry.family == "lm"
+    if probe:
+        # Full unroll of a 62-layer step compiles for ~hours on one CPU
+        # core; cost totals are EXACTLY linear in layer count for uniform
+        # stacks, so compile two shallow unrolled probes and extrapolate
+        # (embedding/head/optimizer live in the intercept).
+        cfg = entry.config
+        k1, k2 = _probe_layer_counts(cfg)
+        L = cfg.n_layers
+        runs = []
+        for k in (k1, k2):
+            mk = dict(merged, n_layers=k)
+            compiled, notes = _compile_cell(arch, shape, mesh, mk)
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            hlo = compiled.as_text()
+            st = RL.collective_bytes(hlo, mesh.devices.size)
+            runs.append(dict(flops=float(cost.get("flops", 0)),
+                             bytes=float(cost.get("bytes accessed", 0)),
+                             wire=st.wire_bytes, stats=st,
+                             mem=compiled.memory_analysis()))
+        t_lower = 0.0
+        t_compile = time.time() - t0
+
+        def extrap(key):
+            per = (runs[1][key] - runs[0][key]) / (k2 - k1)
+            return runs[0][key] + per * (L - k1)
+
+        flops, hlo_bytes = extrap("flops"), extrap("bytes")
+        wire = int(extrap("wire"))
+        stats = runs[1]["stats"]
+        scale = wire / max(stats.wire_bytes, 1)
+        stats.op_bytes = {k: int(v * scale)
+                          for k, v in stats.op_bytes.items()}
+        stats.wire_bytes = wire
+        mem = runs[1]["mem"]
+        notes = notes + [f"extrapolated from unrolled L={k1},{k2} probes "
+                         f"(memory_analysis is the L={k2} probe; the scan "
+                         f"variant is the fits-proof)"]
+        compiled = None
+    else:
+        step, args, in_sh, donate, rules, notes = build_cell(
+            arch, shape, mesh, merged)
+        with mesh, use_rules(rules):
+            jitted = jax.jit(step, in_shardings=in_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        flops = float(cost.get("flops", 0.0))
+        hlo_bytes = float(cost.get("bytes accessed", 0.0))
+        mem = compiled.memory_analysis()
+    per_dev_mem = 0
+    mem_detail = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_detail[attr] = int(v)
+    per_dev_mem = (mem_detail.get("argument_size_in_bytes", 0)
+                   + mem_detail.get("temp_size_in_bytes", 0)
+                   - mem_detail.get("alias_size_in_bytes", 0))
+
+    bytes_raw = hlo_bytes
+    if (merged.get("fp32")
+            and getattr(entry.config, "param_dtype", "") == "bfloat16"):
+        hlo_bytes /= 2          # native-bf16 traffic (see fp32 note above)
+        notes.append("fp32-lowered; memory term = bytes/2 (native bf16)")
+    n_dev = mesh.devices.size
+    if not probe:
+        stats = RL.collective_bytes(compiled.as_text(), n_dev)
+    r = RL.Roofline(
+        arch=arch, shape=shape, mesh=mesh_kind,
+        flops=flops, hlo_bytes=hlo_bytes, wire_bytes=stats.wire_bytes,
+        model_flops=RL.model_flops_for(arch, shape, entry, spec),
+        n_devices=n_dev, per_device_mem=per_dev_mem,
+        collective_detail={"bytes": stats.op_bytes, "count": stats.op_count},
+        notes="; ".join(notes))
+    out = r.to_dict()
+    out.update(bytes_per_dev_raw=bytes_raw, variant=variant, overrides={k: str(v) for k, v in
+                                           merged.items()},
+               t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+               memory_analysis=mem_detail, ok=True)
+    return out
+
+
+def _parse_set(pairs):
+    ov = {}
+    for kv in pairs or ():
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                pass
+        ov[k] = v
+    return ov
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true",
+                    help="subprocess-per-cell sweep over the full grid")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="hillclimb overrides k=v")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="benchmarks/dryrun_results.jsonl")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        return sweep(args)
+
+    ov = _parse_set(args.set)
+    try:
+        res = run_cell(args.arch, args.shape, args.mesh, ov, args.variant)
+    except Exception as e:  # record the failure; the sweep continues
+        res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "variant": args.variant, "ok": False,
+               "error": f"{type(e).__name__}: {e}"}
+    line = json.dumps(res)
+    print(line)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(line + "\n")
+    return 0 if res.get("ok") else 1
+
+
+def sweep(args):
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for ln in f:
+                try:
+                    r = json.loads(ln)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("ok"):
+                    done.add((r["arch"], r["shape"], r["mesh"],
+                              r.get("variant", "baseline")))
+    meshes = args.meshes.split(",")
+    cells = [(a, s) for a, s, skip in registry.cells()]
+    failures = 0
+    for mesh_kind in meshes:
+        for arch, shape in cells:
+            key = (arch, shape, mesh_kind, args.variant)
+            if key in done:
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                   "--variant", args.variant, "--out", args.out]
+            if args.set:
+                cmd += ["--set"] + args.set
+            print(f"[sweep] {arch} x {shape} x {mesh_kind}", flush=True)
+            try:
+                rc = subprocess.run(cmd, timeout=args.timeout).returncode
+            except subprocess.TimeoutExpired:
+                rc = -1
+                with open(args.out, "a") as f:
+                    f.write(json.dumps({
+                        "arch": arch, "shape": shape, "mesh": mesh_kind,
+                        "variant": args.variant, "ok": False,
+                        "error": f"timeout>{args.timeout}s"}) + "\n")
+            failures += rc != 0
+    print(f"[sweep] complete, {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

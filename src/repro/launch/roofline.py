@@ -1,0 +1,259 @@
+"""Three-term roofline from a compiled dry-run artifact (no real TPU).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = wire_bytes_per_device / ICI_bw_per_chip
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the post-SPMD module is
+the per-device program, so no further division by chip count).  Collective
+bytes are NOT in cost_analysis: we parse the compiled HLO text, build a
+name->shape symbol table, and sum *wire* bytes for every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute using ring
+formulas over the parsed replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+# --- TPU v5e-class hardware constants (per chip) -------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (conservative single-link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?([%\w.\-]+)\s*=\s*(\([^=]*?\)|\S+?)\s+"
+                     r"([\w\-]+)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}(?:,|\s|$)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string; tuples sum their elements."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},{")[0]
+        first = first.strip("{}")
+        if first:
+            return len(first.split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: int = 0                      # per-device bytes on the wire
+    op_bytes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    op_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add(self, kind: str, b: int):
+        self.wire_bytes += b
+        self.op_bytes[kind] = self.op_bytes.get(kind, 0) + b
+        self.op_count[kind] = self.op_count.get(kind, 0) + 1
+
+
+def collective_bytes(hlo_text: str, n_devices: int = 512) -> CollectiveStats:
+    """Per-device wire bytes for every collective in an HLO module.
+
+    Ring formulas (bytes each participant puts on the wire):
+      all-gather      out * (g-1)/g      (out = full gathered buffer)
+      reduce-scatter  in  * (g-1)/g      (in = full pre-reduce buffer)
+      all-reduce      2 * in * (g-1)/g
+      all-to-all      io  * (g-1)/g
+      collective-permute  out            (point-to-point)
+    """
+    # Pass 1: symbol table name -> shape string (definition sites).
+    shapes: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, out_shape, op = m.groups()
+        kind = next((c for c in COLLECTIVES if op.startswith(c)), None)
+        if kind is None or op.endswith("-done"):
+            continue
+        g = _group_size(line, n_devices)
+        out_b = shape_bytes(out_shape)
+        if g <= 1:
+            continue
+        frac = (g - 1) / g
+        if kind == "all-gather":
+            b = int(out_b * frac)
+        elif kind == "reduce-scatter":
+            b = int(out_b * (g - 1))          # in = out * g
+        elif kind == "all-reduce":
+            b = int(2 * out_b * frac)
+        elif kind == "all-to-all":
+            b = int(out_b * frac)
+        else:                                  # collective-permute
+            b = out_b
+        stats.add(kind, b)
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float                 # per-device HLO flops
+    hlo_bytes: float             # per-device HLO bytes accessed
+    wire_bytes: float            # per-device collective wire bytes
+    model_flops: float           # global useful flops (6ND etc.)
+    n_devices: int
+    per_device_mem: int          # memory_analysis temp+args estimate
+    collective_detail: dict
+    notes: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / max(three terms): 1.0 = at the roofline."""
+        t_useful = (self.model_flops / self.n_devices) / PEAK_FLOPS
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_bound if t_bound > 0 else 0.0
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        hlo_global = self.flops * self.n_devices
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "flops_per_dev": self.flops, "bytes_per_dev": self.hlo_bytes,
+            "wire_bytes_per_dev": self.wire_bytes,
+            "model_flops": self.model_flops, "n_devices": self.n_devices,
+            "per_device_mem": self.per_device_mem,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "collectives": self.collective_detail,
+            "notes": self.notes,
+        }
+
+
+def model_flops_for(arch: str, shape_name: str, entry, spec) -> float:
+    """Useful-work FLOPs: 6*N*D train / 2*N*D inference (active params)."""
+    fam = entry.family
+    cfg = entry.config
+    if fam == "lm":
+        n_active = cfg.active_param_count
+        if spec.kind == "train":
+            tokens = spec.global_batch * spec.seq_len
+            return 6.0 * n_active * tokens
+        if spec.kind == "prefill":
+            tokens = spec.global_batch * spec.seq_len
+            return 2.0 * n_active * tokens
+        # decode: one token per sequence + attention reads over the cache.
+        # local/global archs only read the window for local layers.
+        tokens = spec.global_batch
+        if cfg.local_global_ratio:
+            r = cfg.local_global_ratio
+            n_glob = cfg.n_layers // (r + 1)
+            n_loc = cfg.n_layers - n_glob
+            l_eff = (n_loc * min(cfg.sliding_window, spec.seq_len)
+                     + n_glob * spec.seq_len)
+        else:
+            l_eff = cfg.n_layers * spec.seq_len
+        attn = 4.0 * l_eff * cfg.n_heads * cfg.d_head * tokens
+        return 2.0 * n_active * tokens + attn
+    if fam == "gnn":
+        n, e = spec.extra("n_nodes", 0), spec.extra("n_edges", 0)
+        if spec.name == "minibatch_lg":
+            b = spec.extra("batch_nodes")
+            f1, f2 = spec.extra("fanout")
+            n = b + b * f1 + (b + b * f1) * f2
+            e = b * f1 + (b + b * f1) * f2
+        if spec.name == "molecule":
+            n, e = 30 * spec.extra("batch"), 64 * spec.extra("batch")
+        d = cfg.d_hidden
+        per_edge = 2.0 * (cfg.n_rbf * d + 2 * d * d)
+        per_node = 2.0 * 4 * d * d
+        return 3.0 * cfg.n_interactions * (e * per_edge + n * per_node)
+    # recsys: embedding bytes dominate; FLOPs = MLP + interaction
+    B = spec.global_batch
+    if spec.kind == "retrieval":
+        return 2.0 * spec.extra("n_candidates") * cfg.embed_dim
+    d = cfg.embed_dim
+    f = cfg.n_sparse
+    flops = 0.0
+    dims_in = f * d + cfg.n_dense
+    if cfg.interaction == "dot":
+        flops += f * f * d
+        dims_in = cfg.bot_mlp[-1] + f * (f - 1) // 2
+    elif cfg.interaction == "cross":
+        flops += 3 * 2 * cfg.n_cross_layers * dims_in * dims_in
+    elif cfg.interaction == "cin":
+        prev = f
+        for h in cfg.cin_layers:
+            flops += 2 * prev * f * d * h
+            prev = h
+        dims_in = sum(cfg.cin_layers)
+    elif cfg.interaction == "augru":
+        flops += cfg.seq_len * 2 * 3 * (2 * d + cfg.gru_dim) * cfg.gru_dim
+        dims_in = 2 * d + cfg.gru_dim
+    mlps = list(cfg.bot_mlp) + [dims_in] + list(cfg.top_mlp) + [1]
+    for a, b in zip(mlps[:-1], mlps[1:]):
+        flops += 2 * a * b
+    mult = 3.0 if spec.kind == "train" else 1.0
+    return mult * B * flops
+
+
+def format_row(r: Roofline) -> str:
+    return (f"{r.arch:<20s} {r.shape:<14s} {r.mesh:<6s} "
+            f"c={r.t_compute * 1e3:9.3f}ms m={r.t_memory * 1e3:9.3f}ms "
+            f"w={r.t_collective * 1e3:9.3f}ms "
+            f"bound={r.bottleneck:<10s} frac={r.roofline_fraction:6.3f} "
+            f"useful={r.useful_flop_ratio:5.2f}")

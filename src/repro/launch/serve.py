@@ -1,0 +1,116 @@
+"""Paged-KV serving driver: continuous batching over the slice-pool
+allocator (the paper's policy running a decoder's KV store).
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 12 --z 6,8,10
+
+Protocol: requests arrive with Zipf-ish prompt/output lengths; a request
+is admitted when a sequence slot frees; each decode step reserves slots
+via the allocator, layers write staged k/v, and attention runs through
+the Pallas paged-attention kernel (interpret mode on CPU).  At the end we
+report throughput plus the paper's two costs measured on serving: C_M
+(allocated-vs-used KV waste) and the mean slice-chain length (pointer
+hops, C_T).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import analytical
+from repro.core.pointers import PoolLayout
+from repro.models import transformer as T
+from repro.paged import kv_cache as P
+from repro.paged import serve_model as SM
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-seqs", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=448)
+    ap.add_argument("--z", default="6,8,10",
+                    help="KV slice config Z_kv (log2 tokens per slice)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    z = tuple(int(v) for v in args.z.split(","))
+    cfg = registry.reduced_config(args.arch)
+    if cfg.moe:
+        raise SystemExit("paged serve demo supports dense archs "
+                         "(pick tinyllama-1.1b / deepseek-coder-33b / "
+                         "gemma3-12b)")
+    rng = np.random.default_rng(args.seed)
+    params = T.init_lm(cfg, jax.random.key(1))
+
+    # pool sizing: enough slices for max_seqs concurrent max_len chains
+    per_seq = analytical.slices_needed(z, np.asarray([args.max_len]))[0]
+    spp = tuple(max(8, int(args.max_seqs * per_seq))
+                for _ in range(len(z)))
+    layout = PoolLayout(z=z, slices_per_pool=spp)
+    server = SM.make_server(cfg, layout, args.max_seqs, args.max_len)
+    state = P.init_kv_state(server.kv_cfg)
+
+    # request workload
+    p_len = np.clip(rng.zipf(1.5, args.requests) * 4, 4, 64)
+    o_len = np.clip(rng.zipf(1.4, args.requests) * 8, 8,
+                    args.max_len - 80)
+    queue = list(range(args.requests))
+    active = {}          # slot -> [remaining_out, generated]
+    free = list(range(args.max_seqs))
+    done = 0
+    total_tokens = 0
+    t0 = time.time()
+    print(f"serving {args.requests} requests on {args.max_seqs} slots, "
+          f"Z_kv={z}; arch={cfg.name} ({cfg.param_count / 1e6:.1f}M)")
+
+    while done < args.requests:
+        # admit
+        while queue and free:
+            r = queue.pop(0)
+            slot = free.pop(0)
+            prompt = rng.integers(1, cfg.vocab, size=(1, p_len[r]))
+            nxt, state = SM.prefill(
+                server, params, state, np.asarray([slot]),
+                prompt.astype(np.int32), np.asarray([p_len[r]]))
+            active[slot] = [int(o_len[r]), int(np.asarray(nxt)[0]), r]
+            total_tokens += int(p_len[r])
+        # one decode step for all active sequences
+        slots = sorted(active)
+        ids = jnp.asarray(slots, jnp.int32)
+        toks = jnp.asarray([active[s][1] for s in slots], jnp.int32)
+        nxt, _, state = SM.decode_step(server, params, state, ids, toks)
+        nxt = np.asarray(nxt)
+        total_tokens += len(slots)
+        for i, s in enumerate(slots):
+            active[s][0] -= 1
+            active[s][1] = int(nxt[i])
+            if active[s][0] <= 0:
+                done += 1
+                free.append(s)     # NOTE: slots are reused; chains remain
+                del active[s]      # until segment rollover (demo keeps
+                                   # them — waste is measured below)
+    dt = time.time() - t0
+
+    lens = np.asarray(state.length)
+    used = int(lens.sum())
+    alloc = P.kv_slots_allocated(server.kv_cfg, state)
+    hops = analytical.slices_needed(z, np.maximum(lens[lens > 0], 1))
+    print(f"done: {args.requests} requests, {total_tokens} tokens in "
+          f"{dt:.1f}s ({total_tokens / dt:.1f} tok/s on CPU interpret)")
+    print(f"paper-costs on serving: C_M waste = "
+          f"{(alloc - used) / max(alloc, 1) * 100:.1f}% "
+          f"(alloc {alloc} vs used {used} slots); "
+          f"mean slice-chain hops = {hops.mean():.2f}")
+    print("sweep --z to trade waste vs hops (bench_paged_kv does this "
+          "analytically; paper Fig 3's Goldilocks curve).")
+    return total_tokens / dt
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Shared neural-net layers: RMSNorm, RoPE, GQA attention (full / sliding
+window / decode-with-cache), SwiGLU MLP.  Pure functions over explicit
+parameter pytrees; no framework dependency.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding. x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(angles)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset=0,
+                window: Optional[int] = None):
+    """[q_len, kv_len] boolean mask; True == attend."""
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    k_pos = jnp.arange(kv_len)[None, :]
+    m = k_pos <= q_pos
+    if window is not None:
+        m &= k_pos > q_pos - window
+    return m
+
+
+def gqa_attention(q, k, v, mask=None, scale: Optional[float] = None):
+    """Grouped-query attention.
+
+    q: [B, S, Hq, D]; k, v: [B, T, Hkv, D] with Hq % Hkv == 0.
+    mask: broadcastable to [B, Hq, S, T]; softmax in fp32.
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, S, Hkv, G, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k) * scale
+    logits = logits.astype(jnp.float32)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        elif mask.ndim == 4:  # [B, Hq, S, T] -> [B, Hkv, G, S, T]
+            mask = mask.reshape(B, Hkv, G, S, -1)
+        logits = jnp.where(mask, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, Hq, D)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

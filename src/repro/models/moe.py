@@ -1,0 +1,230 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+Dispatch strategy (baseline, pjit-friendly):
+  1. router -> top-k experts per token (fp32 softmax, renormalised gates)
+  2. flatten (token, k) pairs, sort by expert id
+  3. rank-within-expert via group starts; drop beyond capacity
+     C = cf * T * k / E (token dropping, GShard-style)
+  4. gather tokens into [E, C, d], batched-expert einsum (SwiGLU),
+     scatter-add back weighted by gates.
+
+The einsum over [E, C, d] x [E, d, f] shards cleanly: E over 'model' when
+divisible (expert parallelism) else f over 'model' (tensor parallelism
+within experts).  The §Perf pass hillclimbs the collective schedule with an
+explicit shard_map all-to-all variant (see train/ep_shardmap.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+
+
+def init_moe_layer(cfg: LMConfig, key) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, fe = cfg.d_model, cfg.moe_d_ff
+    E = cfg.moe_ep_pad or cfg.n_experts   # padded experts never routed-to
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": L.dense_init(ks[0], (d, E), jnp.float32),
+        "experts": {
+            "w_gate": L.dense_init(ks[1], (E, d, fe), dt),
+            "w_up": L.dense_init(ks[2], (E, d, fe), dt),
+            "w_down": L.dense_init(ks[3], (E, fe, d), dt, scale=fe ** -0.5),
+        },
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        p["shared"] = {
+            "w_gate": L.dense_init(ks[4], (d, fs), dt),
+            "w_up": L.dense_init(ks[5], (d, fs), dt),
+            "w_down": L.dense_init(ks[6], (fs, d), dt, scale=fs ** -0.5),
+        }
+    return p
+
+
+def moe_layer_specs(cfg: LMConfig, mesh_model_size: int | None = None) -> dict:
+    """Logical specs.  Experts go to 'model' (EP) when the expert count is
+    model-divisible; otherwise shard the ffn dim (TP-within-expert)."""
+    ep = (cfg.moe_ep_pad or cfg.n_experts) % (mesh_model_size or 16) == 0
+    if ep:
+        experts = {
+            "w_gate": ("model", "fsdp", None),
+            "w_up": ("model", "fsdp", None),
+            "w_down": ("model", None, "fsdp"),
+        }
+    else:
+        experts = {
+            "w_gate": (None, "fsdp", "model"),
+            "w_up": (None, "fsdp", "model"),
+            "w_down": (None, "model", "fsdp"),
+        }
+    s = {"router": (None, None), "experts": experts}
+    if cfg.n_shared_experts:
+        s["shared"] = {
+            "w_gate": ("fsdp", "model"),
+            "w_up": ("fsdp", "model"),
+            "w_down": ("model", "fsdp"),
+        }
+    return s
+
+
+def _capacity(cfg: LMConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.moe_top_k / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)
+
+
+def moe_ffn(x, p, cfg: LMConfig):
+    """Token-dropping top-k MoE.
+
+    x: [G, Tg, d] (grouped, preferred) or [T, d] (single group).
+
+    GShard-style GROUPED dispatch: routing, argsort and capacity are per
+    group, so every dispatch tensor keeps the leading group dim — which is
+    the (data-sharded) batch dim.  A single global dispatch would force
+    GSPMD to replicate the [E, C, d] buffers through the global argsort /
+    scatter (measured: 10.7 GB x 35 buffers on qwen2-moe train_4k,
+    EXPERIMENTS.md §Dry-run); grouped dispatch shards them dp-ways.
+    """
+    if x.ndim == 3:
+        return _moe_ffn_grouped(x, p, cfg)
+    return _moe_ffn_tokens(x, p, cfg)
+
+
+def _moe_ffn_grouped(x, p, cfg: LMConfig):
+    """x: [G, T, d].  Explicitly grouped dispatch with sharding constraints
+    on every large intermediate (a vmap of the token path hides the group
+    dim from constrain() and XLA's einsum reassociation then drops the
+    sharding — measured, see EXPERIMENTS.md §Dry-run)."""
+    G, T, d = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    Ep = cfg.moe_ep_pad or E            # buffers sized to padded experts
+    C = _capacity(cfg, T)
+
+    # --- routing (fp32), per group; padded experts masked out ---
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits[..., :E], axis=-1)             # [G, T, E]
+    gate, expert = jax.lax.top_k(probs, k)                       # [G, T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # --- flatten + sort by expert id within each group ---
+    e_flat = expert.reshape(G, T * k)
+    t_flat = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(T, dtype=jnp.int32), k), (G, T * k))
+    g_flat = gate.reshape(G, T * k)
+    order = jnp.argsort(e_flat, axis=-1)
+    e_s = jnp.take_along_axis(e_flat, order, axis=-1)
+    t_s = jnp.take_along_axis(t_flat, order, axis=-1)
+    g_s = jnp.take_along_axis(g_flat, order, axis=-1)
+
+    # --- rank within expert, capacity drop (per group) ---
+    group_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E)))(e_s)   # [G, E]
+    rank = jnp.arange(T * k)[None, :] - jnp.take_along_axis(
+        group_start, e_s, axis=-1)
+    keep = rank < C
+    dest = jnp.where(keep, e_s * C + rank, Ep * C)               # [G, T*k]
+
+    # --- slot maps [G, Ep*C] ---
+    gi = jnp.arange(G)[:, None]
+    slot_tok = jnp.full((G, Ep * C + 1), T, jnp.int32)
+    slot_tok = slot_tok.at[gi, dest].set(t_s.astype(jnp.int32), mode="drop")
+    slot_tok = constrain(slot_tok[:, :-1], "batch", None)
+    slot_gate = jnp.zeros((G, Ep * C + 1), jnp.float32)
+    slot_gate = slot_gate.at[gi, dest].set(g_s, mode="drop")
+    slot_gate = constrain(slot_gate[:, :-1], "batch", None)
+
+    # --- gather to [G, Ep, C, d] ---
+    xe = jnp.take_along_axis(
+        x, slot_tok[:, :, None], axis=1, mode="fill",
+        fill_value=0).reshape(G, Ep, C, d)
+    xe = constrain(xe, "batch", None, None, None)
+
+    # --- batched expert SwiGLU (experts shard EP or TP via weight specs) ---
+    we = p["experts"]
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, we["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, we["w_up"])
+    h = constrain(h, "batch", None, None, "model")
+    ye = jnp.einsum("gecf,efd->gecd", h, we["w_down"])
+    ye = constrain(ye, "batch", None, None, None)
+
+    # --- weighted scatter back, per group ---
+    ye_flat = (ye.reshape(G, Ep * C, d).astype(jnp.float32)
+               * slot_gate[:, :, None])
+    y = jnp.zeros((G, T + 1, d), jnp.float32)
+    y = y.at[gi, slot_tok].add(ye_flat, mode="drop")
+    y = constrain(y[:, :T].astype(x.dtype), "batch", None, None)
+
+    if cfg.n_shared_experts:
+        y = y + L.swiglu(x, **p["shared"])
+
+    # --- metrics: load balance (Switch aux) + drop fraction ---
+    density = jnp.mean(
+        jax.nn.one_hot(expert, E, dtype=jnp.float32), axis=(0, 1, 2))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux_loss = E * jnp.sum(density * mean_probs)
+    dropped = 1.0 - jnp.sum(keep) / (G * T * k)
+    return y, {"aux_loss": aux_loss, "drop_fraction": dropped}
+
+
+def _moe_ffn_tokens(x, p, cfg: LMConfig):
+    """x: [T, d] -> ([T, d], metrics). One dispatch group."""
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    C = _capacity(cfg, T)
+
+    # --- routing (fp32); padded experts masked out ---
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits[..., :E], axis=-1)             # [T, E]
+    gate, expert = jax.lax.top_k(probs, k)                       # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # --- flatten + sort by expert ---
+    e_flat = expert.reshape(-1)                                  # [T*k]
+    t_flat = jnp.repeat(jnp.arange(T), k)
+    g_flat = gate.reshape(-1)
+    order = jnp.argsort(e_flat)
+    e_s, t_s, g_s = e_flat[order], t_flat[order], g_flat[order]
+
+    # --- rank within expert, capacity drop ---
+    group_start = jnp.searchsorted(e_s, jnp.arange(E))           # [E]
+    rank = jnp.arange(T * k) - group_start[e_s]
+    keep = rank < C
+    dest = jnp.where(keep, e_s * C + rank, E * C)                # sentinel
+
+    # --- gather to [E, C, d] ---
+    slot_tok = jnp.full((E * C + 1,), T, jnp.int32)
+    slot_tok = slot_tok.at[dest].set(t_s.astype(jnp.int32), mode="drop")
+    slot_tok = slot_tok[:-1]
+    slot_gate = jnp.zeros((E * C + 1,), jnp.float32)
+    slot_gate = slot_gate.at[dest].set(g_s, mode="drop")
+    slot_gate = slot_gate[:-1]
+    xe = jnp.take(x, slot_tok, axis=0, mode="fill",
+                  fill_value=0).reshape(E, C, d)
+
+    # --- batched expert SwiGLU ---
+    we = p["experts"]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, we["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, we["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, we["w_down"])              # [E, C, d]
+
+    # --- weighted scatter back ---
+    ye_flat = (ye.reshape(E * C, d).astype(jnp.float32)
+               * slot_gate[:, None])
+    y = jnp.zeros((T + 1, d), jnp.float32)
+    y = y.at[slot_tok].add(ye_flat, mode="drop")
+    y = y[:T].astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        y = y + L.swiglu(x, **p["shared"])
+
+    # --- metrics: load balance (Switch aux loss) + drop fraction ---
+    density = jnp.mean(
+        jax.nn.one_hot(expert, E, dtype=jnp.float32), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(density * mean_probs)
+    dropped = 1.0 - jnp.sum(keep) / (T * k)
+    return y, {"aux_loss": aux_loss, "drop_fraction": dropped}

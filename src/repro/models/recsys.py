@@ -1,0 +1,359 @@
+"""Recsys models: DLRM (dot), DCN-v2 (cross), xDeepFM (CIN), DIEN (AUGRU).
+
+EmbeddingBag is built from scratch (JAX has no native one): per-field
+tables are CONCATENATED into one [total_rows, dim] matrix with per-field
+row offsets; lookups are `jnp.take`; multi-hot bags reduce with
+`jax.ops.segment_sum`.  Tables row-shard over the 'model' mesh axis (the
+canonical DLRM table-parallel layout); the Zipf machinery from
+repro.core.analytical sizes shard balance (DESIGN.md §4).
+
+Each model exposes init_X / X_forward / param specs; the shared train loss
+is sigmoid BCE on a click label.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag substrate
+# ---------------------------------------------------------------------------
+def field_offsets(vocab_sizes) -> jnp.ndarray:
+    import numpy as np
+    off = np.zeros(len(vocab_sizes), np.int64)
+    off[1:] = np.cumsum(vocab_sizes)[:-1]
+    return jnp.asarray(off, jnp.int32)
+
+
+ROW_PAD = 512  # tables pad to a multiple of the largest sharding ways
+               # (pod*data*model = 512); padded rows are never addressed
+               # because every index stays inside its field's range.
+
+
+def padded_rows(total_rows: int) -> int:
+    return -(-total_rows // ROW_PAD) * ROW_PAD
+
+
+def init_table(key, total_rows: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (padded_rows(total_rows), dim),
+                              jnp.float32) * 0.01).astype(dtype)
+
+
+def embedding_lookup(table, idx_per_field, offsets):
+    """idx_per_field: int32[B, F] (one id per field) -> [B, F, D].
+
+    Out-of-vocab ids clip to the last row of their field's range (hash
+    collisions / OOV buckets do this in production; avoids fill-NaN)."""
+    flat = idx_per_field + offsets[None, :]
+    return jnp.take(table, flat.reshape(-1), axis=0, mode="clip").reshape(
+        *idx_per_field.shape, table.shape[-1])
+
+
+def embedding_bag(table, indices, segments, num_bags, mode="sum"):
+    """Multi-hot bag lookup: gather rows then segment-reduce.
+
+    indices: int32[nnz] rows; segments: int32[nnz] bag id per index.
+    """
+    rows = jnp.take(table, indices, axis=0)
+    out = jax.ops.segment_sum(rows, segments, num_segments=num_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(indices, table.dtype),
+                                  segments, num_segments=num_bags)
+        out = out / jnp.maximum(cnt, 1)[:, None]
+    return out
+
+
+def _mlp_init(key, dims: Tuple[int, ...], dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": L.dense_init(ks[i], (dims[i], dims[i + 1]), dtype),
+             "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i in range(len(dims) - 1)]
+
+
+def _mlp_apply(layers_, x, final_act=False):
+    for i, p in enumerate(layers_):
+        x = x @ p["w"] + p["b"]
+        if i < len(layers_) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _mlp_specs(dims):
+    return [{"w": (None, None), "b": (None,)} for _ in range(len(dims) - 1)]
+
+
+class RecsysBatch(NamedTuple):
+    dense: Optional[jax.Array]       # float[B, n_dense]
+    sparse: jax.Array                # int32[B, n_sparse]
+    label: Optional[jax.Array]       # float[B]
+    hist: Optional[jax.Array] = None      # int32[B, T] (DIEN)
+    hist_len: Optional[jax.Array] = None  # int32[B]
+
+
+# ---------------------------------------------------------------------------
+# DLRM (dot interaction)  [arXiv:1906.00091]
+# ---------------------------------------------------------------------------
+def init_dlrm(cfg: RecsysConfig, key) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_f = cfg.n_sparse + 1
+    n_inter = n_f * (n_f - 1) // 2
+    top_in = cfg.bot_mlp[-1] + n_inter
+    return {
+        "table": init_table(k1, cfg.total_rows, cfg.embed_dim, dt),
+        "bot": _mlp_init(k2, cfg.bot_mlp, dt),
+        "top": _mlp_init(k3, (top_in, *cfg.top_mlp), dt),
+    }
+
+
+def dlrm_param_specs(cfg: RecsysConfig) -> dict:
+    return {"table": ("rows", None),
+            "bot": _mlp_specs(cfg.bot_mlp),
+            "top": _mlp_specs((0, *cfg.top_mlp))}
+
+
+def dlrm_forward(params, batch: RecsysBatch, cfg: RecsysConfig,
+                 offsets) -> jax.Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    d = _mlp_apply(params["bot"], batch.dense.astype(cdt), final_act=True)
+    e = embedding_lookup(params["table"], batch.sparse, offsets)   # [B,F,D]
+    e = constrain(e, "batch", None, None)
+    feats = jnp.concatenate([d[:, None, :], e.astype(cdt)], axis=1)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    f = feats.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    z = jnp.concatenate([d, inter[:, iu, ju]], axis=-1)
+    return _mlp_apply(params["top"], z)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2 (cross network)  [arXiv:2008.13535]
+# ---------------------------------------------------------------------------
+def init_dcn(cfg: RecsysConfig, key) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    ks = jax.random.split(k2, cfg.n_cross_layers)
+    return {
+        "table": init_table(k1, cfg.total_rows, cfg.embed_dim, dt),
+        "cross": [{"w": L.dense_init(ks[i], (d0, d0), dt),
+                   "b": jnp.zeros((d0,), dt)}
+                  for i in range(cfg.n_cross_layers)],
+        "mlp": _mlp_init(k3, (d0, *cfg.top_mlp), dt),
+        "head": L.dense_init(k4, (cfg.top_mlp[-1] + d0, 1), dt),
+    }
+
+
+def dcn_param_specs(cfg: RecsysConfig) -> dict:
+    return {
+        "table": ("rows", None),
+        "cross": [{"w": (None, None), "b": (None,)}
+                  for _ in range(cfg.n_cross_layers)],
+        "mlp": _mlp_specs((0, *cfg.top_mlp)),
+        "head": (None, None),
+    }
+
+
+def dcn_forward(params, batch: RecsysBatch, cfg: RecsysConfig,
+                offsets) -> jax.Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    e = embedding_lookup(params["table"], batch.sparse, offsets)
+    e = constrain(e, "batch", None, None).astype(cdt)
+    x0 = jnp.concatenate(
+        [batch.dense.astype(cdt), e.reshape(e.shape[0], -1)], axis=-1)
+    x = x0
+    for p in params["cross"]:
+        x = x0 * (x @ p["w"] + p["b"]) + x      # x0 ⊙ (Wx + b) + x
+    deep = _mlp_apply(params["mlp"], x0, final_act=True)
+    z = jnp.concatenate([x, deep], axis=-1)
+    return (z @ params["head"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# xDeepFM (Compressed Interaction Network)  [arXiv:1803.05170]
+# ---------------------------------------------------------------------------
+def init_xdeepfm(cfg: RecsysConfig, key) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    m = cfg.n_sparse
+    cin = []
+    h_prev = m
+    ks = jax.random.split(k2, len(cfg.cin_layers))
+    for i, h in enumerate(cfg.cin_layers):
+        cin.append(L.dense_init(ks[i], (h_prev, m, h), dt))
+        h_prev = h
+    dnn_in = m * cfg.embed_dim
+    return {
+        "table": init_table(k1, cfg.total_rows, cfg.embed_dim, dt),
+        "linear": init_table(k3, cfg.total_rows, 1, dt),
+        "cin": cin,
+        "dnn": _mlp_init(k4, (dnn_in, *cfg.top_mlp), dt),
+        "head": L.dense_init(
+            k5, (sum(cfg.cin_layers) + cfg.top_mlp[-1] + 1, 1), dt),
+    }
+
+
+def xdeepfm_param_specs(cfg: RecsysConfig) -> dict:
+    return {
+        "table": ("rows", None),
+        "linear": ("rows", None),
+        "cin": [(None, None, None) for _ in cfg.cin_layers],
+        "dnn": _mlp_specs((0, *cfg.top_mlp)),
+        "head": (None, None),
+    }
+
+
+def xdeepfm_forward(params, batch: RecsysBatch, cfg: RecsysConfig,
+                    offsets) -> jax.Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x0 = embedding_lookup(params["table"], batch.sparse, offsets)
+    x0 = constrain(x0, "batch", None, None).astype(cdt)   # [B, m, D]
+    # CIN
+    xk = x0
+    pooled = []
+    for w in params["cin"]:
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)            # outer product
+        xk = jnp.einsum("bhmd,hmn->bnd", z, w.astype(cdt))  # compress
+        pooled.append(jnp.sum(xk, axis=-1))                # [B, H_k]
+    cin_out = jnp.concatenate(pooled, axis=-1)
+    # DNN
+    dnn_out = _mlp_apply(params["dnn"], x0.reshape(x0.shape[0], -1),
+                         final_act=True)
+    # Linear
+    lin = embedding_lookup(params["linear"], batch.sparse, offsets)
+    lin = jnp.sum(lin[..., 0].astype(cdt), axis=1, keepdims=True)
+    z = jnp.concatenate([cin_out, dnn_out, lin], axis=-1)
+    return (z @ params["head"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DIEN (interest evolution: GRU + attention + AUGRU)  [arXiv:1809.03672]
+# ---------------------------------------------------------------------------
+def _gru_init(key, d_in, d_h, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": L.dense_init(k1, (d_in, 3 * d_h), dtype),
+        "wh": L.dense_init(k2, (d_h, 3 * d_h), dtype),
+        "b": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def _gru_cell(p, h, x, a=None):
+    """GRU step; ``a`` (optional [B,1]) turns it into AUGRU (attention
+    gates the update gate — DIEN eq. 5)."""
+    xi = x @ p["wi"] + p["b"]
+    hh = h @ p["wh"]
+    xi_r, xi_u, xi_c = jnp.split(xi, 3, axis=-1)
+    hh_r, hh_u, hh_c = jnp.split(hh, 3, axis=-1)
+    r = jax.nn.sigmoid(xi_r + hh_r)
+    u = jax.nn.sigmoid(xi_u + hh_u)
+    cand = jnp.tanh(xi_c + r * hh_c)
+    if a is not None:
+        u = u * a
+    return (1.0 - u) * h + u * cand
+
+
+def init_dien(cfg: RecsysConfig, key) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d_e = cfg.embed_dim * 2  # item + category embedding
+    return {
+        "table": init_table(k1, cfg.total_rows, cfg.embed_dim, dt),
+        "gru": _gru_init(k2, d_e, cfg.gru_dim, dt),
+        "augru": _gru_init(k3, d_e + 0, cfg.gru_dim, dt),
+        "att": L.dense_init(k4, (cfg.gru_dim + d_e, 1), dt),
+        "mlp": _mlp_init(k5, (cfg.gru_dim + 2 * d_e, *cfg.top_mlp, 1), dt),
+    }
+
+
+def dien_param_specs(cfg: RecsysConfig) -> dict:
+    g = {"wi": (None, None), "wh": (None, None), "b": (None,)}
+    return {"table": ("rows", None), "gru": dict(g), "augru": dict(g),
+            "att": (None, None),
+            "mlp": _mlp_specs((0, *cfg.top_mlp, 1))}
+
+
+def dien_forward(params, batch: RecsysBatch, cfg: RecsysConfig,
+                 offsets) -> jax.Array:
+    """batch.sparse: [B, 2] = (target item, target category);
+    batch.hist: [B, T, 2] item+category history."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, T = batch.hist.shape[0], batch.hist.shape[1]
+    tgt = embedding_lookup(params["table"], batch.sparse, offsets)
+    tgt = tgt.reshape(B, -1).astype(cdt)                       # [B, 2D]
+    hist_flat = batch.hist.reshape(B * T, 2)
+    he = embedding_lookup(params["table"], hist_flat, offsets)
+    he = he.reshape(B, T, -1).astype(cdt)                      # [B, T, 2D]
+    he = constrain(he, "batch", None, None)
+    mask = (jnp.arange(T)[None, :] < batch.hist_len[:, None])
+
+    # Interest extraction: GRU over history
+    def gru_step(h, xt):
+        x, m = xt
+        h2 = _gru_cell(params["gru"], h, x)
+        h = jnp.where(m[:, None], h2, h)
+        return h, h
+
+    h0 = jnp.zeros((B, cfg.gru_dim), cdt)
+    _, hs = jax.lax.scan(gru_step, h0,
+                         (he.swapaxes(0, 1), mask.swapaxes(0, 1)),
+                         unroll=cfg.unroll_seq)
+    hs = hs.swapaxes(0, 1)                                     # [B, T, H]
+
+    # Attention scores vs target
+    att_in = jnp.concatenate(
+        [hs, jnp.broadcast_to(tgt[:, None], (B, T, tgt.shape[-1]))], -1)
+    scores = (att_in @ params["att"])[..., 0]
+    scores = jnp.where(mask, scores, -1e30)
+    alpha = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(cdt)
+
+    # Interest evolution: AUGRU over history
+    def augru_step(h, xt):
+        x, a, m = xt
+        h2 = _gru_cell(params["augru"], h, x, a[:, None])
+        h = jnp.where(m[:, None], h2, h)
+        return h, None
+
+    hf, _ = jax.lax.scan(
+        augru_step, jnp.zeros((B, cfg.gru_dim), cdt),
+        (he.swapaxes(0, 1), alpha.swapaxes(0, 1), mask.swapaxes(0, 1)),
+        unroll=cfg.unroll_seq)
+
+    z = jnp.concatenate([hf, tgt, jnp.mean(he, 1)], axis=-1)
+    return _mlp_apply(params["mlp"], z)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Retrieval scoring (retrieval_cand shape): 1 query vs N candidates
+# ---------------------------------------------------------------------------
+def retrieval_scores(table, user_vec, cand_ids):
+    """Batched dot scoring of one user vector against N candidate item
+    embeddings — NOT a loop (spec requirement)."""
+    cand = jnp.take(table, cand_ids, axis=0, mode="clip")   # [N, D]
+    d = min(user_vec.shape[-1], cand.shape[-1])
+    return cand[:, :d] @ user_vec[:d]
+
+
+# ---------------------------------------------------------------------------
+# Shared loss
+# ---------------------------------------------------------------------------
+def bce_loss(logits, labels):
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+FORWARDS = {
+    "dot": (init_dlrm, dlrm_forward, dlrm_param_specs),
+    "cross": (init_dcn, dcn_forward, dcn_param_specs),
+    "cin": (init_xdeepfm, xdeepfm_forward, xdeepfm_param_specs),
+    "augru": (init_dien, dien_forward, dien_param_specs),
+}

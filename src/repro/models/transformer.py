@@ -1,0 +1,558 @@
+"""Decoder-only transformer LM: dense + MoE + local/global (gemma3-style)
+attention, with train forward, prefill, and decode-with-KV-cache paths.
+
+Implementation notes (scale-driven):
+  * Layers are STACKED and applied with ``lax.scan`` — one layer of HLO
+    regardless of depth, fast multi-pod compiles, and the natural place to
+    hang per-layer remat.
+  * Attention is q-CHUNKED with fp32 logits: peak transient is
+    [B, Hkv, G, q_chunk, T] instead of the O(S^2) full score matrix, which
+    is what makes prefill_32k / train_4k lowerable without a fused kernel.
+    (On real TPUs the Pallas paged/flash kernels in repro.kernels take over;
+    the jnp path is the oracle and the CPU dry-run path. See DESIGN.md.)
+  * gemma3-style configs (local_global_ratio=k) keep TWO parameter stacks
+    (local / global); decode keeps a ring-buffer window cache for local
+    layers — the KV-cache instantiation of the paper's Goldilocks argument
+    (allocate by need, not by max).
+  * MoE uses sort-based capacity dispatch (einsum over [E, C, d]) — see
+    moe.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models.moe import init_moe_layer, moe_ffn, moe_layer_specs
+
+
+def _scan(cfg: LMConfig, body, init, xs):
+    """lax.scan with the dry-run unroll knob (see LMConfig.unroll_layers)."""
+    return jax.lax.scan(body, init, xs, unroll=cfg.unroll_layers)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_layer(cfg: LMConfig, key) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, dh = cfg.d_model, cfg.d_head
+    hq, hkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    ks = jax.random.split(key, 8)
+    p = {
+        "attn_norm": jnp.zeros((d,), dt),
+        "mlp_norm": jnp.zeros((d,), dt),
+        "wq": L.dense_init(ks[0], (d, hq * dh), dt),
+        "wk": L.dense_init(ks[1], (d, hkv * dh), dt),
+        "wv": L.dense_init(ks[2], (d, hkv * dh), dt),
+        "wo": L.dense_init(ks[3], (hq * dh, d), dt),
+    }
+    if cfg.moe:
+        p["moe"] = init_moe_layer(cfg, ks[4])
+    else:
+        p["mlp"] = {
+            "w_gate": L.dense_init(ks[5], (d, f), dt),
+            "w_up": L.dense_init(ks[6], (d, f), dt),
+            "w_down": L.dense_init(ks[7], (f, d), dt),
+        }
+    return p
+
+
+def _layer_specs(cfg: LMConfig) -> dict:
+    s = {
+        "attn_norm": (None,),
+        "mlp_norm": (None,),
+        "wq": ("fsdp", "model"),
+        "wk": ("fsdp", "model"),
+        "wv": ("fsdp", "model"),
+        "wo": ("model", "fsdp"),
+    }
+    if cfg.moe:
+        s["moe"] = moe_layer_specs(cfg)
+    else:
+        s["mlp"] = {
+            "w_gate": ("fsdp", "model"),
+            "w_up": ("fsdp", "model"),
+            "w_down": ("model", "fsdp"),
+        }
+    return s
+
+
+def _stack_init(cfg: LMConfig, key, n: int) -> dict:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_layer(cfg, k))(keys)
+
+
+def _n_local_global(cfg: LMConfig) -> Tuple[int, int]:
+    r = cfg.local_global_ratio
+    if r <= 0:
+        return 0, cfg.n_layers
+    assert cfg.n_layers % (r + 1) == 0, "layers must tile (local^r, global)"
+    n_groups = cfg.n_layers // (r + 1)
+    return n_groups * r, n_groups
+
+
+def init_lm(cfg: LMConfig, key) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    k_emb, k_head, k_loc, k_glob = jax.random.split(key, 4)
+    n_loc, n_glob = _n_local_global(cfg)
+    params = {
+        "embed": L.dense_init(k_emb, (cfg.vocab, cfg.d_model), dt, scale=1.0),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab), dt)
+    if n_loc:
+        params["local_layers"] = _stack_init(cfg, k_loc, n_loc)
+        params["global_layers"] = _stack_init(cfg, k_glob, n_glob)
+    else:
+        params["layers"] = _stack_init(cfg, k_glob, cfg.n_layers)
+    return params
+
+
+def lm_param_specs(cfg: LMConfig) -> dict:
+    def stacked(spec_tree):
+        return jax.tree.map(lambda s: (None, *s), spec_tree,
+                            is_leaf=lambda s: isinstance(s, tuple))
+    layer = _layer_specs(cfg)
+    n_loc, _ = _n_local_global(cfg)
+    specs = {
+        "embed": ("model", "fsdp"),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ("fsdp", "model")
+    if n_loc:
+        specs["local_layers"] = stacked(layer)
+        specs["global_layers"] = stacked(layer)
+    else:
+        specs["layers"] = stacked(layer)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Attention (q-chunked, dynamic window)
+# ---------------------------------------------------------------------------
+def chunked_attention(q, k, v, *, window, q_chunk: int, q_offset=0,
+                      unroll: bool = False):
+    """Causal GQA attention, scanning over q chunks.
+
+    q: [B, S, Hq, D]; k, v: [B, T, Hkv, D]; window: traced int (<=0 = full).
+    ``unroll`` mirrors LMConfig.unroll_layers: the chunk loop is ALSO a
+    scan whose body XLA cost_analysis counts once (EXPERIMENTS §Dry-run).
+    """
+    B, S, Hq, D = q.shape
+    T = k.shape[1]
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+    q_chunk = min(q_chunk, S)
+    n_chunks = S // q_chunk
+    assert S % q_chunk == 0, (S, q_chunk)
+
+    qg = q.reshape(B, n_chunks, q_chunk, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    k_pos = jnp.arange(T)
+
+    def one_chunk(c, q_c):
+        # q_c: [B, q_chunk, Hkv, G, D]
+        q_pos = q_offset + c * q_chunk + jnp.arange(q_chunk)
+        logits = jnp.einsum("bskgd,btkd->bkgst", q_c, k) * scale
+        logits = logits.astype(jnp.float32)
+        m = k_pos[None, :] <= q_pos[:, None]
+        m &= k_pos[None, :] > q_pos[:, None] - jnp.where(window > 0, window, T + S)
+        logits = jnp.where(m[None, None, None], logits, jnp.float32(-1e30))
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgst,btkd->bskgd", probs, v)
+
+    def scan_body(_, args):
+        return None, one_chunk(*args)
+
+    _, out = jax.lax.scan(scan_body, None, (jnp.arange(n_chunks), qg),
+                          unroll=unroll)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, Hq, D)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Transformer block
+# ---------------------------------------------------------------------------
+def _project_qkv(p, x, cfg: LMConfig, positions):
+    B, S, _ = x.shape
+    dh = cfg.d_head
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, dh)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, dh)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def block_forward(p, x, cfg: LMConfig, *, window, positions,
+                  q_chunk: int = 512, return_kv: bool = False,
+                  kv_keep: int = 0):
+    """One transformer block over a full sequence (train / prefill).
+
+    With ``return_kv`` the block also emits its (k, v) — the prefill path;
+    ``kv_keep`` > 0 trims the emitted cache to the trailing window (local
+    layers keep only their sliding window, the Goldilocks allocation)."""
+    h = L.rms_norm(x, p["attn_norm"])
+    q, k, v = _project_qkv(p, h, cfg, positions)
+    # head dim takes TP; when SP is active the seq dim yields here and
+    # GSPMD inserts the SP<->TP boundary collectives (Megatron-SP).
+    q = constrain(q, "batch", None, "model", None)
+    attn = chunked_attention(q, k, v, window=window, q_chunk=q_chunk,
+                             unroll=cfg.unroll_layers)
+    x = x + (attn.reshape(*x.shape[:2], -1) @ p["wo"])
+    x = constrain(x, "batch", "seq", None)
+    h = L.rms_norm(x, p["mlp_norm"])
+    if cfg.moe:
+        ff, _ = moe_ffn(h, p["moe"], cfg)   # grouped dispatch: [B, S, d]
+    else:
+        ff = L.swiglu(h, **p["mlp"])
+    x = x + ff
+    x = constrain(x, "batch", "seq", None)
+    if not return_kv:
+        return x
+    if kv_keep:
+        k, v = k[:, -kv_keep:], v[:, -kv_keep:]
+    return x, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+def lm_forward(params, tokens, cfg: LMConfig, q_chunk: int = 512):
+    B, S = tokens.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[tokens]
+    x = constrain(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full = jnp.int32(0)  # window<=0 -> full causal
+    win = jnp.int32(cfg.sliding_window or 0)
+
+    def run_block(x, p, window):
+        p = jax.tree.map(lambda a: a.astype(cdt), p)
+        blk = lambda xx: block_forward(p, xx, cfg, window=window,
+                                       positions=positions, q_chunk=q_chunk)
+        if cfg.remat:
+            blk = jax.checkpoint(blk)
+        return blk(x)
+
+    n_loc, n_glob = _n_local_global(cfg)
+    if n_loc:
+        r = cfg.local_global_ratio
+        loc = jax.tree.map(
+            lambda a: a.reshape(n_glob, r, *a.shape[1:]),
+            params["local_layers"])
+
+        def group(x, xs):
+            loc_g, glob_g = xs
+
+            def inner(x, p):
+                return run_block(x, p, win), None
+
+            x, _ = _scan(cfg, inner, x, loc_g)
+            x = run_block(x, glob_g, full)
+            return x, None
+
+        x, _ = _scan(cfg, group, x, (loc, params["global_layers"]))
+    else:
+        def body(x, p):
+            return run_block(x, p, full), None
+
+        x, _ = _scan(cfg, body, x, params["layers"])
+
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(cdt)
+    return constrain(logits, "batch", None, "model")
+
+
+def lm_loss(params, tokens, cfg: LMConfig, q_chunk: int = 512):
+    """Next-token cross-entropy (fp32 log-softmax)."""
+    logits = lm_forward(params, tokens, cfg, q_chunk=q_chunk)
+    logits = logits[:, :-1].astype(jnp.float32)
+    labels = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def lm_prefill(params, tokens, cfg: LMConfig, q_chunk: int = 512):
+    """Prefill: full forward that also emits the per-layer KV cache.
+
+    Returns (last-position logits [B, V], DecodeCache with seq_len entries;
+    local layers keep only the trailing sliding window)."""
+    B, S = tokens.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[tokens]
+    x = constrain(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full = jnp.int32(0)
+    win = jnp.int32(cfg.sliding_window or 0)
+
+    def run_block(x, p, window, kv_keep):
+        p = jax.tree.map(lambda a: a.astype(cdt), p)
+        blk = lambda xx: block_forward(
+            p, xx, cfg, window=window, positions=positions,
+            q_chunk=q_chunk, return_kv=True, kv_keep=kv_keep)
+        if cfg.remat:
+            blk = jax.checkpoint(blk)
+        return blk(x)
+
+    n_loc, n_glob = _n_local_global(cfg)
+    if n_loc:
+        r = cfg.local_global_ratio
+        W = min(cfg.sliding_window, S)
+        loc = jax.tree.map(
+            lambda a: a.reshape(n_glob, r, *a.shape[1:]),
+            params["local_layers"])
+
+        def group(x, xs):
+            loc_g, glob_g = xs
+
+            def inner(x, p):
+                x, kv = run_block(x, p, win, W)
+                return x, kv
+
+            x, kv_loc = _scan(cfg, inner, x, loc_g)
+            x, kv_glob = run_block(x, glob_g, full, 0)
+            return x, (kv_loc, kv_glob)
+
+        x, ((kl, vl), (kg, vg)) = _scan(cfg, 
+            group, x, (loc, params["global_layers"]))
+        cache = DecodeCache(k=kg, v=vg,
+                            k_loc=kl.reshape(-1, *kl.shape[2:]),
+                            v_loc=vl.reshape(-1, *vl.shape[2:]))
+    else:
+        def body(x, p):
+            x, kv = run_block(x, p, full, 0)
+            return x, kv
+
+        x, (k, v) = _scan(cfg, body, x, params["layers"])
+        cache = DecodeCache(k=k, v=v)
+
+    x = L.rms_norm(x[:, -1], params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(cdt)).astype(jnp.float32)
+    return constrain(logits, "batch", "model"), cache
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+class DecodeCache(NamedTuple):
+    k: jax.Array          # [L, B, T, Hkv, D]  (T = window for local stacks)
+    v: jax.Array
+    k_loc: Optional[jax.Array] = None  # local-layer ring buffers
+    v_loc: Optional[jax.Array] = None
+    # int8 quantized cache (cfg.kv_quant): per-(token, kv-head) scales
+    k_sc: Optional[jax.Array] = None       # [L, B, T, Hkv] f32
+    v_sc: Optional[jax.Array] = None
+    k_loc_sc: Optional[jax.Array] = None
+    v_loc_sc: Optional[jax.Array] = None
+
+
+def init_decode_cache(cfg: LMConfig, batch: int, max_len: int,
+                      dtype=None) -> DecodeCache:
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    if cfg.kv_quant:
+        dt = jnp.int8
+    n_loc, n_glob = _n_local_global(cfg)
+    dh, hkv = cfg.d_head, cfg.n_kv_heads
+    shape_g = (n_glob if n_loc else cfg.n_layers, batch, max_len, hkv, dh)
+    cache = DecodeCache(
+        k=jnp.zeros(shape_g, dt), v=jnp.zeros(shape_g, dt))
+    if cfg.kv_quant:
+        cache = cache._replace(k_sc=jnp.zeros(shape_g[:-1], jnp.float32),
+                               v_sc=jnp.zeros(shape_g[:-1], jnp.float32))
+    if n_loc:
+        w = min(cfg.sliding_window, max_len)
+        shape_l = (n_loc, batch, w, hkv, dh)
+        cache = cache._replace(k_loc=jnp.zeros(shape_l, dt),
+                               v_loc=jnp.zeros(shape_l, dt))
+        if cfg.kv_quant:
+            cache = cache._replace(
+                k_loc_sc=jnp.zeros(shape_l[:-1], jnp.float32),
+                v_loc_sc=jnp.zeros(shape_l[:-1], jnp.float32))
+    return cache
+
+
+def decode_cache_specs(cfg: LMConfig):
+    spec = (None, "batch", "kv_seq", None, None)
+    sc = (None, "batch", "kv_seq", None) if cfg.kv_quant else None
+    n_loc, _ = _n_local_global(cfg)
+    if n_loc:
+        # window caches are small; shard batch only
+        spec_l = (None, "batch", None, None, None)
+        sc_l = (None, "batch", None, None) if cfg.kv_quant else None
+        return DecodeCache(k=spec, v=spec, k_loc=spec_l, v_loc=spec_l,
+                           k_sc=sc, v_sc=sc, k_loc_sc=sc_l, v_loc_sc=sc_l)
+    return DecodeCache(k=spec, v=spec, k_sc=sc, v_sc=sc)
+
+
+def _decode_attn(q, k_cache, v_cache, pos, *, ring: bool, window: int = 0,
+                 k_sc=None, v_sc=None):
+    """q: [B, 1, Hq, D]; cache: [B, T, Hkv, D]; pos: scalar int.
+
+    int8 caches (k_sc/v_sc per-(token, head) scales) fold EXACTLY into
+    the two dots: logits *= k_sc after the q.k dot; probs *= v_sc before
+    the probs.v dot — no dequantized [B, T, Hkv, D] copy materializes."""
+    B, _, Hq, D = q.shape
+    T = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, D)
+    cdt = qg.dtype if k_sc is None else jnp.float32
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(cdt),
+                        k_cache.astype(cdt)) * (D ** -0.5)
+    logits = logits.astype(jnp.float32)
+    if k_sc is not None:
+        logits = logits * k_sc.transpose(0, 2, 1)[:, :, None, None, :]
+    slot = jnp.arange(T)
+    if ring:
+        # slot j holds absolute position p' = pos - ((pos - j) mod T)
+        age = jnp.mod(pos - slot, T)
+        abs_pos = pos - age
+        valid = abs_pos >= 0
+    else:
+        valid = slot <= pos
+        if window:
+            valid &= slot > pos - window
+    logits = jnp.where(valid[None, None, None, None, :], logits,
+                       jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1)
+    if v_sc is not None:
+        probs = probs * v_sc.transpose(0, 2, 1)[:, :, None, None, :]
+        out = jnp.einsum("bkgst,btkd->bskgd", probs,
+                         v_cache.astype(jnp.float32))
+    else:
+        probs = probs.astype(v_cache.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache)
+    return out.reshape(B, 1, Hq, D)
+
+
+def _quant_kv(x):
+    """[B, 1, Hkv, D] -> (int8 values, [B, 1, Hkv] f32 scale)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def _decode_block(p, x, kv, pos, cfg: LMConfig, *, ring: bool):
+    k_cache, v_cache, k_sc, v_sc = kv
+    B = x.shape[0]
+    h = L.rms_norm(x, p["attn_norm"])
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q, k, v = _project_qkv(p, h, cfg, positions)
+    T = k_cache.shape[1]
+    write = jnp.mod(pos, T) if ring else pos
+    if cfg.kv_quant:
+        k, ks = _quant_kv(k)
+        v, vs = _quant_kv(v)
+        k_sc = jax.lax.dynamic_update_slice(k_sc, ks, (0, write, 0))
+        v_sc = jax.lax.dynamic_update_slice(v_sc, vs, (0, write, 0))
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k, (0, write, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v, (0, write, 0, 0))
+    attn = _decode_attn(q, k_cache, v_cache, pos, ring=ring,
+                        k_sc=k_sc, v_sc=v_sc)
+    x = x + (attn.reshape(B, 1, -1) @ p["wo"])
+    h = L.rms_norm(x, p["mlp_norm"])
+    if cfg.moe:
+        ff, _ = moe_ffn(h, p["moe"], cfg)   # grouped dispatch: [B, S, d]
+    else:
+        ff = L.swiglu(h, **p["mlp"])
+    return x + ff, (k_cache, v_cache, k_sc, v_sc)
+
+
+def lm_decode_step(params, cache: DecodeCache, token, pos, cfg: LMConfig):
+    """One decode step.  token: [B, 1] int32; pos: scalar int32 (current
+    length).  Returns (logits [B, vocab], new cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[token]
+    n_loc, n_glob = _n_local_global(cfg)
+
+    def cast(p):
+        return jax.tree.map(lambda a: a.astype(cdt), p)
+
+    quant = cfg.kv_quant
+    L_glob = n_glob if n_loc else cfg.n_layers
+
+    def _sc(a, n=None):    # scale xs stand-ins when quantization is off
+        if a is not None:
+            return a
+        return jnp.zeros((n or L_glob, 1), jnp.float32)
+
+    if n_loc:
+        r = cfg.local_global_ratio
+        loc = jax.tree.map(
+            lambda a: a.reshape(n_glob, r, *a.shape[1:]),
+            params["local_layers"])
+
+        def resh(a):
+            return a.reshape(n_glob, r, *a.shape[1:])
+
+        kl, vl = resh(cache.k_loc), resh(cache.v_loc)
+        kls = resh(_sc(cache.k_loc_sc, n_loc))
+        vls = resh(_sc(cache.v_loc_sc, n_loc))
+
+        def group(x, xs):
+            loc_g, kl_g, vl_g, kls_g, vls_g, glob_p, kg, vg, kgs, vgs = xs
+
+            def inner(x, ys):
+                p, kc, vc, ksc, vsc = ys
+                x, (kc, vc, ksc, vsc) = _decode_block(
+                    cast(p), x,
+                    (kc, vc, ksc if quant else None,
+                     vsc if quant else None), pos, cfg, ring=True)
+                return x, (kc, vc, _sc(ksc), _sc(vsc))
+
+            x, (kl_g, vl_g, kls_g, vls_g) = _scan(
+                cfg, inner, x, (loc_g, kl_g, vl_g, kls_g, vls_g))
+            x, (kg, vg, kgs, vgs) = _decode_block(
+                cast(glob_p), x,
+                (kg, vg, kgs if quant else None, vgs if quant else None),
+                pos, cfg, ring=False)
+            return x, (kl_g, vl_g, kls_g, vls_g, kg, vg, _sc(kgs),
+                       _sc(vgs))
+
+        x, (kl, vl, kls, vls, kg, vg, kgs, vgs) = _scan(
+            cfg, group, x, (loc, kl, vl, kls, vls,
+                            params["global_layers"], cache.k, cache.v,
+                            _sc(cache.k_sc), _sc(cache.v_sc)))
+        back = lambda a: a.reshape(-1, *a.shape[2:])
+        cache = DecodeCache(
+            k=kg, v=vg, k_loc=back(kl), v_loc=back(vl),
+            k_sc=kgs if quant else None, v_sc=vgs if quant else None,
+            k_loc_sc=back(kls) if quant else None,
+            v_loc_sc=back(vls) if quant else None)
+    else:
+        def body(x, xs):
+            p, kc, vc, ksc, vsc = xs
+            x, (kc, vc, ksc, vsc) = _decode_block(
+                cast(p), x,
+                (kc, vc, ksc if quant else None, vsc if quant else None),
+                pos, cfg, ring=False)
+            return x, (kc, vc, _sc(ksc), _sc(vsc))
+
+        x, (k, v, ks, vs) = _scan(
+            cfg, body, x, (params["layers"], cache.k, cache.v,
+                           _sc(cache.k_sc), _sc(cache.v_sc)))
+        cache = DecodeCache(k=k, v=v,
+                            k_sc=ks if quant else None,
+                            v_sc=vs if quant else None)
+
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head.astype(cdt)).astype(jnp.float32)
+    return constrain(logits, "batch", "model"), cache

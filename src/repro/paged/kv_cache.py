@@ -1,0 +1,295 @@
+"""Paged KV cache: the paper's slice-pool allocator applied to LM serving.
+
+A decoding sequence's KV history is a postings list in every sense that
+matters to the paper: append-only, newest-first access, Zipf-ish length
+distribution across requests.  We therefore allocate KV storage in
+increasingly larger slices from fixed pools with packed-pointer chaining —
+`Z_kv = <6, 8, 10>` by default (64/256/1024-token slices).
+
+TPU adaptations vs the paper (recorded in DESIGN.md §2/§6):
+  * A "slot" holds one token's K/V vectors for all layers & kv-heads, not
+    a uint32 — so slice links live in a SIDECAR uint32 array indexed by
+    flat slice id (the paper's "other encodings ... small constant factor
+    adjustment" §3.3).  Slices hold a full 2**z tokens (no burned slot).
+  * Appends are BATCHED: every active sequence appends one token per
+    decode step; pool allocation contention resolves with a prefix-sum
+    rank assignment instead of the paper's single-writer assumption.
+  * All slice sizes are multiples of a fixed PAGE (64 tokens), so the
+    flattened chain is a page table of uniform tiles — what the Pallas
+    paged-attention kernel consumes (contiguous DMA, the TPU's C_p).
+
+The paper's cost model transfers: memory waste = allocated - used token
+slots (theta thresholds without pointer slots); traversal cost = pages
+touched per attention step.  benchmarks/bench_paged_kv.py validates both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pointers as ptr_mod
+from repro.core.pointers import NULL, PoolLayout
+
+PAGE = 64  # tokens per kernel-visible page
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    layout: PoolLayout            # z in log2 TOKENS per slice
+    n_layers: int
+    n_kv_heads: int
+    d_head: int
+    max_seqs: int
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert min(self.layout.z) >= int(math.log2(PAGE)), (
+            f"KV slices must be >= one {PAGE}-token page")
+
+    @property
+    def total_slice_count(self) -> int:
+        return sum(self.layout.slices_per_pool)
+
+
+def default_kv_layout(slices_per_pool=(512, 256, 128)) -> PoolLayout:
+    """Z_kv = <6, 8, 10>: 64 / 256 / 1024-token slices."""
+    return PoolLayout(z=(6, 8, 10), slices_per_pool=tuple(slices_per_pool))
+
+
+class PagedKVState(NamedTuple):
+    k_heap: jax.Array     # [L, Hkv, slots, D]
+    v_heap: jax.Array     # [L, Hkv, slots, D]
+    link: jax.Array       # uint32[total_slices] previous-slice pointer
+    watermark: jax.Array  # int32[P]
+    tail: jax.Array       # uint32[max_seqs] packed ptr to last written slot
+    length: jax.Array     # int32[max_seqs]
+    overflow: jax.Array   # bool[]
+
+
+def _slice_id_base(layout: PoolLayout) -> np.ndarray:
+    base, acc = [], 0
+    for n in layout.slices_per_pool:
+        base.append(acc)
+        acc += n
+    return np.asarray(base, np.int32)
+
+
+def init_kv_state(cfg: PagedKVConfig) -> PagedKVState:
+    lay = cfg.layout
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, cfg.n_kv_heads, lay.total_slots, cfg.d_head)
+    return PagedKVState(
+        k_heap=jnp.zeros(shape, dt),
+        v_heap=jnp.zeros(shape, dt),
+        link=jnp.full((cfg.total_slice_count,), NULL, jnp.uint32),
+        watermark=jnp.zeros((lay.num_pools,), jnp.int32),
+        tail=jnp.full((cfg.max_seqs,), NULL, jnp.uint32),
+        length=jnp.zeros((cfg.max_seqs,), jnp.int32),
+        overflow=jnp.asarray(False),
+    )
+
+
+def kv_slots_allocated(cfg: PagedKVConfig, state: PagedKVState) -> int:
+    wm = np.asarray(state.watermark, np.int64)
+    return int(np.sum(wm * np.asarray(cfg.layout.slice_sizes, np.int64)))
+
+
+def make_append_fn(cfg: PagedKVConfig):
+    """Batched one-token-per-sequence append (one decode step).
+
+    append(state, seq_ids [B], k [L, B, Hkv, D], v) -> state
+    Distinct seq_ids required (each active sequence appends once).
+    """
+    lay = cfg.layout
+    tbl = lay.tables()
+    pb = lay.pool_bits
+    P = lay.num_pools
+    caps = jnp.asarray(lay.slices_per_pool, jnp.int32)
+    sid_base = jnp.asarray(_slice_id_base(lay))
+
+    @jax.jit
+    def append(state: PagedKVState, seq_ids, k, v) -> PagedKVState:
+        B = seq_ids.shape[0]
+        t = state.tail[seq_ids]
+        new = ptr_mod.is_null(t)
+        pool, sl, off = ptr_mod.decode(tbl, pb, t)
+        cap = tbl["slice_size"][pool]
+        full = (~new) & (off == cap - jnp.uint32(1))
+        need = new | full
+        alloc_pool = jnp.where(
+            new, jnp.uint32(0),
+            jnp.minimum(pool + jnp.uint32(1), jnp.uint32(P - 1)))
+
+        # prefix-sum rank assignment per pool
+        onehot = (alloc_pool[:, None] == jnp.arange(P, dtype=jnp.uint32)) \
+            & need[:, None]
+        rank = jnp.cumsum(onehot, axis=0) - 1          # [B, P]
+        rank_b = jnp.take_along_axis(
+            rank, alloc_pool[:, None].astype(jnp.int32), 1)[:, 0]
+        slice_new = (state.watermark[alloc_pool] + rank_b).astype(jnp.uint32)
+        n_alloc = jnp.sum(onehot, axis=0)              # [P]
+        ok = ~need | (slice_new < caps[alloc_pool].astype(jnp.uint32))
+        watermark = state.watermark + n_alloc.astype(jnp.int32)
+        overflow = state.overflow | jnp.any(~ok)
+
+        # link sidecar: new slice points at old tail (or NULL for new seqs)
+        flat_new = sid_base[alloc_pool] + slice_new.astype(jnp.int32)
+        link_idx = jnp.where(need & ok, flat_new, cfg.total_slice_count)
+        link = state.link.at[link_idx].set(
+            jnp.where(new, jnp.uint32(NULL), t), mode="drop")
+
+        # write position
+        w_pool = jnp.where(need, alloc_pool, pool)
+        w_slice = jnp.where(need, slice_new, sl)
+        w_off = jnp.where(need, jnp.uint32(0), off + jnp.uint32(1))
+        addr = ptr_mod.to_addr(tbl, w_pool, w_slice, w_off).astype(jnp.int32)
+        addr = jnp.where(ok, addr, lay.total_slots)
+
+        # k, v: [L, B, Hkv, D] -> scatter on slot axis
+        k_heap = state.k_heap.at[:, :, addr, :].set(
+            k.transpose(0, 2, 1, 3), mode="drop")
+        v_heap = state.v_heap.at[:, :, addr, :].set(
+            v.transpose(0, 2, 1, 3), mode="drop")
+
+        new_tail = ptr_mod.encode(tbl, pb, w_pool, w_slice, w_off)
+        tail = state.tail.at[seq_ids].set(jnp.where(ok, new_tail, t))
+        length = state.length.at[seq_ids].add(ok.astype(jnp.int32))
+        return PagedKVState(k_heap, v_heap, link, watermark, tail,
+                            length, overflow)
+
+    return append
+
+
+def make_page_table_fn(cfg: PagedKVConfig, max_pages: int):
+    """Build ``tables(state, seq_ids) -> int32[B, max_pages]`` of page ids
+    (page = PAGE-token tile; page id = slot_addr // PAGE), chronological
+    order, padded with -1.  This is the chain->flat-table flattening the
+    kernel consumes (DESIGN.md §6.2)."""
+    lay = cfg.layout
+    tbl = lay.tables()
+    pb = lay.pool_bits
+    sid_base = jnp.asarray(_slice_id_base(lay))
+    pages_per_slice = jnp.asarray(
+        [s // PAGE for s in lay.slice_sizes], jnp.int32)
+    max_slices = max_pages  # a slice is >= 1 page
+
+    def one_seq(state: PagedKVState, seq_id):
+        def body(i, carry):
+            ptr, bases, npages, count = carry
+            live = ~ptr_mod.is_null(ptr)
+            pool, sl, _ = ptr_mod.decode(tbl, pb, ptr)
+            base = ptr_mod.to_addr(tbl, pool, sl, jnp.uint32(0))
+            bases = bases.at[i].set(jnp.where(live, base.astype(jnp.int32),
+                                              -1))
+            npages = npages.at[i].set(
+                jnp.where(live, pages_per_slice[pool], 0))
+            flat = sid_base[pool] + sl.astype(jnp.int32)
+            nxt = state.link[flat]
+            ptr = jnp.where(live, nxt, ptr)
+            return ptr, bases, npages, count + live.astype(jnp.int32)
+
+        init = (state.tail[seq_id],
+                jnp.full((max_slices,), -1, jnp.int32),
+                jnp.zeros((max_slices,), jnp.int32),
+                jnp.int32(0))
+        _, bases, npages, n = jax.lax.fori_loop(0, max_slices, body, init)
+        # newest-first -> chronological
+        idx = n - 1 - jnp.arange(max_slices)
+        bases = jnp.where(idx >= 0, bases[jnp.maximum(idx, 0)], -1)
+        npages = jnp.where(idx >= 0, npages[jnp.maximum(idx, 0)], 0)
+        # expand slices to pages
+        cum = jnp.cumsum(npages)
+        start = cum - npages
+        j = jnp.arange(max_pages)
+        s = jnp.searchsorted(cum, j, side="right")
+        s = jnp.minimum(s, max_slices - 1)
+        within = j - start[s]
+        page = jnp.where(bases[s] >= 0, bases[s] // PAGE + within, -1)
+        # trim to actually-used pages (length-derived)
+        n_used = -(-state.length[seq_id] // PAGE)
+        return jnp.where(j < n_used, page, -1)
+
+    @jax.jit
+    def tables(state: PagedKVState, seq_ids):
+        return jax.vmap(lambda s: one_seq(state, s))(seq_ids)
+
+    return tables
+
+
+def gather_kv(state: PagedKVState, page_table, layer: int):
+    """Reference KV gather: [B, max_pages*PAGE, Hkv, D] (padded zeros)."""
+    B, n_pages = page_table.shape
+    slots = (page_table[:, :, None] * PAGE
+             + jnp.arange(PAGE)[None, None, :])
+    slots = jnp.where(page_table[:, :, None] >= 0, slots, -1)
+    flat = slots.reshape(B, n_pages * PAGE)               # [B, T]
+    # heap[layer]: [Hkv, slots, D]; gather -> [Hkv, B, T, D]
+    k = jnp.take(state.k_heap[layer], jnp.maximum(flat, 0), axis=1)
+    v = jnp.take(state.v_heap[layer], jnp.maximum(flat, 0), axis=1)
+    valid = (flat >= 0)[None, :, :, None]
+    k = jnp.transpose(jnp.where(valid, k, 0), (1, 2, 0, 3))
+    v = jnp.transpose(jnp.where(valid, v, 0), (1, 2, 0, 3))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Analytical model transfer (paper §5 -> KV serving)
+# ---------------------------------------------------------------------------
+def kv_memory_slots(z: Tuple[int, ...], length) -> np.ndarray:
+    """Token slots allocated for a sequence of given length (no pointer
+    slots — links are sidecar).  Counterpart of analytical.memory_slots."""
+    length = np.asarray(length, np.int64)
+    sizes = np.asarray([1 << zz for zz in z], np.int64)
+    fmax = int(length.max()) if length.size else 1
+    # thresholds: cumulative capacity (full slices, no pointer slot)
+    th = [sizes[0]]
+    while th[-1] < fmax:
+        nxt = sizes[min(len(th), len(z) - 1)]
+        th.append(th[-1] + nxt)
+    th = np.asarray(th, np.int64)
+    i = np.searchsorted(th, np.maximum(length, 1), side="left")
+    return th[i]
+
+
+def kv_pages_touched(z: Tuple[int, ...], length) -> np.ndarray:
+    """Pages read per decode attention step (the paper's C_T analogue)."""
+    return -(-np.asarray(length, np.int64) // PAGE)
+
+
+def make_tail_addr_fn(cfg: PagedKVConfig):
+    """tail_addrs(state, seq_ids) -> int32[B] heap slot address of each
+    sequence's most recently written token (for per-layer staged writes
+    in the serving loop)."""
+    lay = cfg.layout
+    tbl = lay.tables()
+    pb = lay.pool_bits
+
+    @jax.jit
+    def tail_addrs(state: PagedKVState, seq_ids):
+        t = state.tail[seq_ids]
+        pool, sl, off = ptr_mod.decode(tbl, pb, t)
+        return ptr_mod.to_addr(tbl, pool, sl, off).astype(jnp.int32)
+
+    return tail_addrs
+
+
+def write_layer_kv(state: PagedKVState, layer: int, addrs, k, v
+                   ) -> PagedKVState:
+    """Write one token's k/v for ONE layer at pre-allocated heap slots.
+
+    addrs: int32[B]; k, v: [B, Hkv, D].  Used by the staged decode loop:
+    ``append`` first reserves the slot for all layers (zero fill), then
+    each layer writes its k/v as it is computed.
+    """
+    # x[layer, :, addrs, :] has shape [B, Hkv, D] (advanced index axis
+    # moves first when separated by slices) — k/v already match.
+    k_heap = state.k_heap.at[layer, :, addrs, :].set(
+        k.astype(state.k_heap.dtype))
+    v_heap = state.v_heap.at[layer, :, addrs, :].set(
+        v.astype(state.v_heap.dtype))
+    return state._replace(k_heap=k_heap, v_heap=v_heap)

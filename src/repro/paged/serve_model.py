@@ -1,0 +1,121 @@
+"""Paged LM decode: the slice-pool allocator as the KV store of a real
+decoder (the beyond-paper instantiation, DESIGN.md §4.2).
+
+Step protocol (staged writes):
+  1. ``append`` reserves this token's slot for ALL layers (zero fill) and
+     updates tail/length — one allocator transaction per decode step,
+     exactly the paper's ingest path with sequences as "terms".
+  2. page tables are flattened once per step (chain -> pages).
+  3. each layer computes q/k/v, writes its k/v into the reserved slot
+     (``write_layer_kv``) and attends over the page table with the Pallas
+     paged-attention kernel (interpret mode on CPU).
+
+Works with any non-MoE LMConfig (GQA supported; sliding-window layers
+attend full here — window eviction is a TODO recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.paged import kv_cache as P
+
+
+class PagedServer(NamedTuple):
+    cfg: LMConfig
+    kv_cfg: P.PagedKVConfig
+    append: callable
+    tables: callable
+    tail_addrs: callable
+    max_pages: int
+
+
+def make_server(cfg: LMConfig, layout, max_seqs: int,
+                max_len: int) -> PagedServer:
+    assert not cfg.moe, "paged demo server supports dense LMs"
+    kv_cfg = P.PagedKVConfig(layout=layout, n_layers=cfg.n_layers,
+                             n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+                             max_seqs=max_seqs, dtype=cfg.compute_dtype)
+    max_pages = -(-max_len // P.PAGE)
+    return PagedServer(
+        cfg=cfg, kv_cfg=kv_cfg,
+        append=P.make_append_fn(kv_cfg),
+        tables=P.make_page_table_fn(kv_cfg, max_pages),
+        tail_addrs=P.make_tail_addr_fn(kv_cfg),
+        max_pages=max_pages)
+
+
+def _layer_qkv(p, x, cfg: LMConfig, positions):
+    h = L.rms_norm(x, p["attn_norm"])
+    q, k, v = T._project_qkv(p, h, cfg, positions)
+    return q, k, v
+
+
+def decode_step(server: PagedServer, params, state: P.PagedKVState,
+                seq_ids, tokens):
+    """One token for every active sequence.
+
+    seq_ids: int32[B] distinct slots; tokens: int32[B].
+    Returns (next_tokens [B], logits [B, V], new state).
+    """
+    cfg = server.cfg
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B = seq_ids.shape[0]
+
+    # 1. reserve slots (zero k/v), lengths += 1
+    zeros = jnp.zeros((cfg.n_layers, B, cfg.n_kv_heads, cfg.d_head), cdt)
+    state = server.append(state, seq_ids, zeros, zeros)
+    addrs = server.tail_addrs(state, seq_ids)
+    table = server.tables(state, seq_ids)
+    lengths = state.length[seq_ids]
+    positions = (lengths - 1)[:, None]                      # [B, 1]
+
+    x = params["embed"].astype(cdt)[tokens[:, None]]        # [B, 1, d]
+    stack = params["layers"]
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i].astype(cdt), stack)
+        q, k, v = _layer_qkv(p, x, cfg, positions)
+        state = P.write_layer_kv(state, i, addrs, k[:, 0], v[:, 0])
+        qh = q.reshape(B, cfg.n_kv_heads,
+                       cfg.n_heads // cfg.n_kv_heads, cfg.d_head)
+        attn = ops.paged_attention(qh, state.k_heap[i], state.v_heap[i],
+                                   table, lengths)          # [B,Hkv,G,D]
+        attn = attn.astype(cdt).reshape(B, 1, -1)
+        x = x + attn @ p["wo"]
+        h = L.rms_norm(x, p["mlp_norm"])
+        x = x + L.swiglu(h, **p["mlp"])
+
+    x = L.rms_norm(x[:, 0], params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(cdt)).astype(jnp.float32)
+    return jnp.argmax(logits, -1).astype(jnp.int32), logits, state
+
+
+def prefill(server: PagedServer, params, state, seq_ids, prompt,
+            prompt_len):
+    """Token-by-token prefill through the decode path (demo-scale).
+
+    prompt: int32[B, Lmax] padded; prompt_len: int32[B] (host ints).
+    Host-side filtering keeps each decode_step batch dense — only
+    still-prefilling sequences append (allocator lengths stay exact).
+    Returns (first generated token per seq [B], state)."""
+    import numpy as np
+    prompt = np.asarray(prompt)
+    prompt_len = np.asarray(prompt_len)
+    seq_ids = np.asarray(seq_ids)
+    nxt = np.zeros(len(seq_ids), np.int32)
+    for t in range(int(prompt_len.max())):
+        sel = np.nonzero(prompt_len > t)[0]
+        ids = jnp.asarray(seq_ids[sel], jnp.int32)
+        toks = jnp.asarray(prompt[sel, t], jnp.int32)
+        nxt_t, _, state = decode_step(server, params, state, ids, toks)
+        done = prompt_len[sel] == t + 1
+        nxt[sel[done]] = np.asarray(nxt_t)[done]
+    return jnp.asarray(nxt), state

@@ -1,0 +1,129 @@
+"""Fault-tolerant checkpointing: atomic writes, keep-last-k, manifest,
+elastic restore (checkpoints are mesh-independent host arrays, so a
+512-chip checkpoint restores onto any mesh — restore-time resharding is
+just ``device_put`` with the new sharding).
+
+Layout:  <dir>/step_00001234.npz  +  <dir>/MANIFEST.json
+Writes go to a tmp file + atomic ``os.replace`` so a host failure mid-save
+never corrupts the latest checkpoint (restart picks up the previous one).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _key_name(p) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _path_key(path) -> str:
+    return "/".join(_key_name(p) for p in path)
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_path_key(path)] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: dict):
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, like in leaves_p:
+        key = _path_key(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"template {like.shape}")
+        leaves.append(arr.astype(like.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, params, opt_state=None, extra: dict = None):
+        payload = {"params": params}
+        if opt_state is not None:
+            payload["opt_state"] = opt_state
+        flat = _flatten(payload)
+        fname = os.path.join(self.directory, f"step_{step:08d}.npz")
+        fd, tmp = tempfile.mkstemp(dir=self.directory, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as fh:
+                np.savez(fh, **flat)
+            os.replace(tmp, fname)      # atomic on POSIX
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        self._write_manifest(step, extra or {})
+        self._gc()
+        return fname
+
+    def _write_manifest(self, step: int, extra: dict):
+        man = {"latest_step": step, "extra": extra}
+        tmp = os.path.join(self.directory, "MANIFEST.tmp")
+        with open(tmp, "w") as fh:
+            json.dump(man, fh)
+        os.replace(tmp, os.path.join(self.directory, "MANIFEST.json"))
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            os.unlink(os.path.join(self.directory, f"step_{s:08d}.npz"))
+
+    # -- restore ------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for f in os.listdir(self.directory):
+            if f.startswith("step_") and f.endswith(".npz"):
+                out.append(int(f[5:-4]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, params_template, opt_template=None,
+                shardings=None) -> Tuple[Any, Any]:
+        """Restore onto templates; ``shardings`` (optional pytree of
+        NamedSharding) performs elastic resharding via device_put."""
+        fname = os.path.join(self.directory, f"step_{step:08d}.npz")
+        with np.load(fname) as npz:
+            flat = {k: npz[k] for k in npz.files}
+        pf = {k[len("params/"):]: v for k, v in flat.items()
+              if k.startswith("params/")}
+        params = _unflatten(params_template, pf)
+        opt_state = None
+        if opt_template is not None:
+            of = {k[len("opt_state/"):]: v for k, v in flat.items()
+                  if k.startswith("opt_state/")}
+            opt_state = _unflatten(opt_template, of)
+        if shardings is not None:
+            params = jax.device_put(params, shardings)
+        return params, opt_state
+
+    def restore_latest(self, params_template, opt_template=None,
+                       shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None, None
+        p, o = self.restore(step, params_template, opt_template, shardings)
+        return step, p, o

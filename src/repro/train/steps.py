@@ -1,0 +1,201 @@
+"""Step factories per architecture family: train / prefill / decode /
+serve / retrieval.  Each factory closes over config + optimizer and returns
+a pure function ready for ``jax.jit`` (the launcher adds shardings).
+
+Distributed-optimization features live here:
+  * microbatch gradient-accumulation scan (bounds activation live-range),
+  * per-layer remat (inside the models),
+  * optional int8 gradient compression w/ error feedback (compression.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+from repro.models import recsys as R
+from repro.models import schnet as G
+from repro.models import transformer as T
+from repro.train.optimizer import AdamW, AdamWState, global_norm
+
+
+def _accumulate_grads(loss_fn, params, batches, n_micro: int,
+                      accum_dtype=jnp.float32, unroll: bool = False):
+    """lax.scan over microbatches; returns (mean_loss, grad tree)."""
+    if n_micro == 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batches)
+        return loss, grads
+
+    split = jax.tree.map(
+        lambda x: x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]),
+        batches)
+
+    def body(carry, mb):
+        acc_loss, acc_g = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+        acc_g = jax.tree.map(
+            lambda a, g: a + g.astype(accum_dtype), acc_g, grads)
+        return (acc_loss + loss, acc_g), None
+
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, accum_dtype), params)
+    (loss, grads), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), zeros), split, unroll=unroll)
+    inv = 1.0 / n_micro
+    return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+
+def _apply(opt: AdamW, params, opt_state, grads, grad_transform=None):
+    if grad_transform is not None:
+        grads, opt_state = grad_transform(grads, opt_state)
+    new_params, new_opt = opt.update(grads, opt_state, params)
+    return new_params, new_opt
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+def make_lm_train_step(cfg: LMConfig, opt: AdamW, *, n_microbatches=None,
+                       q_chunk: int = 512, grad_accum_dtype=jnp.float32,
+                       grad_transform=None,
+                       unroll_accum: bool = False) -> Callable:
+    n_micro = n_microbatches or cfg.n_microbatches
+
+    def loss_fn(params, tokens):
+        return T.lm_loss(params, tokens, cfg, q_chunk=q_chunk)
+
+    def train_step(params, opt_state: AdamWState, tokens):
+        loss, grads = _accumulate_grads(loss_fn, params, tokens, n_micro,
+                                        grad_accum_dtype,
+                                        unroll=unroll_accum)
+        params, opt_state = _apply(opt, params, opt_state, grads,
+                                   grad_transform)
+        return params, opt_state, {"loss": loss,
+                                   "grad_norm": global_norm(grads)}
+
+    return train_step
+
+
+def make_lm_prefill_step(cfg: LMConfig, q_chunk: int = 512) -> Callable:
+    def prefill_step(params, tokens):
+        return T.lm_prefill(params, tokens, cfg, q_chunk=q_chunk)
+    return prefill_step
+
+
+def make_lm_decode_step(cfg: LMConfig) -> Callable:
+    def decode_step(params, cache: T.DecodeCache, token, pos):
+        logits, cache = T.lm_decode_step(params, cache, token, pos, cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, cache
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# GNN (SchNet)
+# ---------------------------------------------------------------------------
+def make_gnn_train_step(cfg: GNNConfig, opt: AdamW,
+                        n_graphs: int = 1) -> Callable:
+    def loss_fn(params, batch):
+        g = G.GraphBatch(
+            node_feat=batch.get("node_feat"),
+            atom_type=batch.get("atom_type"),
+            src=batch["src"], dst=batch["dst"],
+            edge_dist=batch["edge_dist"], graph_id=batch["graph_id"],
+            n_graphs=n_graphs)
+        return G.schnet_loss(params, g, batch["targets"], cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = _apply(opt, params, opt_state, grads)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_gnn_forward(cfg: GNNConfig, n_graphs: int = 1) -> Callable:
+    def forward(params, batch):
+        g = G.GraphBatch(
+            node_feat=batch.get("node_feat"),
+            atom_type=batch.get("atom_type"),
+            src=batch["src"], dst=batch["dst"],
+            edge_dist=batch["edge_dist"], graph_id=batch["graph_id"],
+            n_graphs=n_graphs)
+        return G.schnet_forward(params, g, cfg)
+    return forward
+
+
+# ---------------------------------------------------------------------------
+# Recsys
+# ---------------------------------------------------------------------------
+def _recsys_batch(batch: dict) -> R.RecsysBatch:
+    return R.RecsysBatch(
+        dense=batch.get("dense"), sparse=batch["sparse"],
+        label=batch.get("label"), hist=batch.get("hist"),
+        hist_len=batch.get("hist_len"))
+
+
+def make_recsys_forward(cfg: RecsysConfig) -> Callable:
+    _, fwd, _ = R.FORWARDS[cfg.interaction]
+    offsets = R.field_offsets(cfg.vocab_sizes)
+
+    def forward(params, batch: dict):
+        return fwd(params, _recsys_batch(batch), cfg, offsets)
+
+    return forward
+
+
+def make_recsys_train_step(cfg: RecsysConfig, opt: AdamW,
+                           n_microbatches: int = 1) -> Callable:
+    forward = make_recsys_forward(cfg)
+
+    def loss_fn(params, batch):
+        logits = forward(params, batch)
+        return R.bce_loss(logits, batch["label"])
+
+    def train_step(params, opt_state, batch):
+        loss, grads = _accumulate_grads(loss_fn, params, batch,
+                                        n_microbatches)
+        params, opt_state = _apply(opt, params, opt_state, grads)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_recsys_retrieval_step(cfg: RecsysConfig) -> Callable:
+    offsets = R.field_offsets(cfg.vocab_sizes)
+
+    def retrieval_step(params, user_sparse, cand_ids):
+        e = R.embedding_lookup(params["table"], user_sparse, offsets)
+        user_vec = jnp.mean(e[0].astype(jnp.float32), axis=0)
+        return R.retrieval_scores(params["table"].astype(jnp.float32),
+                                  user_vec, cand_ids)
+
+    return retrieval_step
+
+
+# ---------------------------------------------------------------------------
+# Family-level dispatch used by launch/dryrun.py and smoke tests
+# ---------------------------------------------------------------------------
+def init_params_for(arch_entry, cfg, key, shape_spec=None):
+    fam = arch_entry.family
+    if fam == "lm":
+        return T.init_lm(cfg, key)
+    if fam == "gnn":
+        d_feat = (shape_spec.extra("d_feat", cfg.d_feat_default)
+                  if shape_spec is not None else cfg.d_feat_default)
+        return G.init_schnet(cfg, key, d_feat=d_feat)
+    init, _, _ = R.FORWARDS[cfg.interaction]
+    return init(cfg, key)
+
+
+def param_specs_for(arch_entry, cfg, mesh_model_size: int = 16):
+    fam = arch_entry.family
+    if fam == "lm":
+        return T.lm_param_specs(cfg)
+    if fam == "gnn":
+        return G.schnet_param_specs(cfg)
+    _, _, specs = R.FORWARDS[cfg.interaction]
+    return specs(cfg)

@@ -1,0 +1,39 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py forces 512 host
+devices (and only when run as its own process)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import analytical
+from repro.core.index import ActiveSegment
+from repro.core.pointers import PoolLayout
+from repro.data import synth
+
+PROD_Z = (1, 4, 7, 11)
+
+
+@pytest.fixture(scope="session")
+def small_layout():
+    return PoolLayout(z=PROD_Z, slices_per_pool=(4096, 2048, 1024, 512))
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    spec = synth.CorpusSpec(vocab=2000, n_docs=500, seed=0)
+    return spec, synth.zipf_corpus(spec)
+
+
+@pytest.fixture(scope="session")
+def indexed_segment(small_layout, small_corpus):
+    spec, docs = small_corpus
+    seg = ActiveSegment(small_layout, spec.vocab)
+    seg.ingest(jnp.asarray(docs))
+    seg.check_health()
+    return seg, docs, synth.term_freqs(docs, spec.vocab)
+
+
+def max_slices_for(z, freqs):
+    fmax = max(int(np.max(freqs)), 1)
+    return int(analytical.slices_needed(z, fmax)) + 1

@@ -1,0 +1,171 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps in interpret mode
+(spec deliverable c)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.paged_attention import PAGE
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# paged_attention
+# ---------------------------------------------------------------------------
+def _paged_case(B, Hkv, G, D, lens, dtype, n_free_pages=64):
+    n_pages_each = [-(-l // PAGE) if l else 0 for l in lens]
+    NP = max(max(n_pages_each), 1)
+    perm = RNG.permutation(n_free_pages)
+    table = np.full((B, NP), -1, np.int32)
+    pi = 0
+    for b, npg in enumerate(n_pages_each):
+        table[b, :npg] = perm[pi:pi + npg]
+        pi += npg
+    slots = n_free_pages * PAGE
+    q = RNG.normal(size=(B, Hkv, G, D)).astype(dtype)
+    kh = RNG.normal(size=(Hkv, slots, D)).astype(dtype)
+    vh = RNG.normal(size=(Hkv, slots, D)).astype(dtype)
+    return (jnp.asarray(q), jnp.asarray(kh), jnp.asarray(vh),
+            jnp.asarray(table), jnp.asarray(np.asarray(lens, np.int32)))
+
+
+@pytest.mark.parametrize("B,Hkv,G,D", [
+    (1, 1, 1, 16), (2, 2, 4, 32), (3, 4, 2, 64), (2, 1, 8, 128),
+])
+def test_paged_attention_shapes(B, Hkv, G, D):
+    lens = [int(x) for x in RNG.integers(1, 5 * PAGE, B)]
+    args = _paged_case(B, Hkv, G, D, lens, np.float32)
+    out = ops.paged_attention(*args, interpret=True)
+    expect = ref.paged_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_paged_attention_bf16():
+    args = _paged_case(2, 2, 2, 32, [70, 200], jnp.bfloat16)
+    out = ops.paged_attention(*args, interpret=True)
+    expect = ref.paged_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_paged_attention_page_boundaries():
+    """Lengths exactly at page edges (the masking edge cases)."""
+    for lens in ([PAGE], [PAGE - 1], [PAGE + 1], [2 * PAGE], [1]):
+        args = _paged_case(1, 1, 2, 16, lens, np.float32)
+        out = ops.paged_attention(*args, interpret=True)
+        expect = ref.paged_attention_ref(*args)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=3e-5, atol=3e-5, err_msg=str(lens))
+
+
+def test_paged_attention_matches_dense():
+    """Through-the-page-table attention == plain dense attention when the
+    pages are identity-mapped."""
+    B, Hkv, G, D, T = 2, 2, 2, 32, 3 * PAGE
+    q = jnp.asarray(RNG.normal(size=(B, Hkv, G, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, T, Hkv, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, T, Hkv, D)), jnp.float32)
+    # pack into per-b pages: heap rows [Hkv, B*T, D], page b*3+i
+    kh = k.transpose(2, 0, 1, 3).reshape(Hkv, B * T, D)
+    vh = v.transpose(2, 0, 1, 3).reshape(Hkv, B * T, D)
+    table = jnp.asarray(
+        [[b * 3 + i for i in range(3)] for b in range(B)], jnp.int32)
+    lens = jnp.asarray([T, T], jnp.int32)
+    out = ops.paged_attention(q, kh, vh, table, lens, interpret=True)
+    # dense reference
+    s = jnp.einsum("bhgd,bthd->bhgt", q, k) * (D ** -0.5)
+    dense = jnp.einsum("bhgt,bthd->bhgd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("R,D,B,max_bag", [
+    (128, 16, 4, 5), (1000, 32, 8, 12), (64, 128, 3, 3),
+])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+def test_embedding_bag(R, D, B, max_bag, mode):
+    lens = RNG.integers(0, max_bag + 1, B)
+    offsets = np.zeros(B + 1, np.int32)
+    offsets[1:] = np.cumsum(lens)
+    n = int(offsets[-1])
+    idx = RNG.integers(0, R, max(n, 1)).astype(np.int32)[:n]
+    if n == 0:
+        idx = np.zeros(0, np.int32)
+    table = RNG.normal(size=(R, D)).astype(np.float32)
+    args = (jnp.asarray(table), jnp.asarray(idx), jnp.asarray(offsets))
+    out = ops.embedding_bag(*args, mode=mode, interpret=True)
+    expect = ref.embedding_bag_ref(*args, mode=mode)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_matches_model_substrate():
+    """Kernel == the models/recsys.py embedding_bag (take+segment_sum)."""
+    from repro.models.recsys import embedding_bag as model_bag
+    R, D, B = 256, 64, 6
+    lens = RNG.integers(1, 6, B)
+    offsets = np.zeros(B + 1, np.int32)
+    offsets[1:] = np.cumsum(lens)
+    idx = RNG.integers(0, R, int(offsets[-1])).astype(np.int32)
+    seg = np.repeat(np.arange(B), lens).astype(np.int32)
+    table = RNG.normal(size=(R, D)).astype(np.float32)
+    out_k = ops.embedding_bag(jnp.asarray(table), jnp.asarray(idx),
+                              jnp.asarray(offsets), interpret=True)
+    out_m = model_bag(jnp.asarray(table), jnp.asarray(idx),
+                      jnp.asarray(seg), B)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_m),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# intersect_mask
+# ---------------------------------------------------------------------------
+def _pad_asc(vals, width):
+    out = np.full(width, 0xFFFFFFFF, np.uint32)
+    v = np.unique(np.asarray(vals, np.uint32))
+    out[: len(v)] = v
+    return out
+
+
+@pytest.mark.parametrize("na,nb,ta,tb", [
+    (256, 256, 256, 256), (512, 256, 128, 128), (1024, 512, 256, 128),
+])
+def test_intersect_mask(na, nb, ta, tb):
+    a = _pad_asc(RNG.choice(4 * na, na // 2, replace=False), na)
+    b = _pad_asc(RNG.choice(4 * na, nb // 3, replace=False), nb)
+    out = ops.intersect_mask(jnp.asarray(a), jnp.asarray(b),
+                             ta=ta, tb=tb, interpret=True)
+    expect = ref.intersect_mask_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_intersect_mask_edges():
+    # empty a / empty b / disjoint / identical
+    empty = _pad_asc([], 256)
+    full = _pad_asc(np.arange(100), 256)
+    hi = _pad_asc(np.arange(1000, 1100), 256)
+    for a, b in [(empty, full), (full, empty), (full, hi), (full, full)]:
+        out = ops.intersect_mask(jnp.asarray(a), jnp.asarray(b),
+                                 interpret=True)
+        expect = ref.intersect_mask_ref(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_intersect_mask_used_by_query_engine():
+    """Kernel mask -> compaction reproduces intersect_asc."""
+    from repro.core.query import _compact, intersect_asc
+    a = _pad_asc(RNG.choice(500, 80, replace=False), 256)
+    b = _pad_asc(RNG.choice(500, 120, replace=False), 256)
+    mask = ops.intersect_mask(jnp.asarray(a), jnp.asarray(b),
+                              interpret=True)
+    got, n_got = _compact(jnp.asarray(a), mask.astype(bool))
+    want, n_want = intersect_asc(jnp.asarray(a), 80, jnp.asarray(b), 120)
+    assert int(n_got) == int(n_want)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,96 @@
+"""Launch-layer units: mesh helpers, roofline HLO parsing, collective
+ring formulas, model-flops accounting.  (The 512-device dry-run itself
+runs as its own process — see launch/dryrun.py and EXPERIMENTS.md.)
+"""
+import numpy as np
+import pytest
+
+from repro.launch import roofline as RL
+from repro.launch.mesh import batch_axes_for
+from repro.configs import registry
+from repro.launch.roofline import model_flops_for
+
+
+class FakeMesh:
+    def __init__(self, shape, axes):
+        self.shape = dict(zip(axes, shape))
+        self.axis_names = tuple(axes)
+
+
+def test_batch_axes_for_divisible():
+    mesh = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    assert batch_axes_for(mesh, 256) == ("pod", "data")
+    assert batch_axes_for(mesh, 32) == ("pod", "data")
+    assert batch_axes_for(mesh, 16) == ("data",)
+    assert batch_axes_for(mesh, 2) == ("pod",)
+    assert batch_axes_for(mesh, 1) is None
+
+
+def test_shape_bytes():
+    assert RL.shape_bytes("bf16[128,1024]{1,0}") == 128 * 1024 * 2
+    assert RL.shape_bytes("f32[10]") == 40
+    assert RL.shape_bytes("(bf16[4,4], u8[16])") == 32 + 16
+    assert RL.shape_bytes("pred[7]") == 7
+    assert RL.shape_bytes("token[]") == 0
+
+
+HLO = """
+HloModule jit_step
+
+ENTRY %main (p0: f32[64,128]) -> f32[64,128] {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %ag = f32[64,2048]{1,0} all-gather(%p0), replica_groups=[32,16]<=[512], dimensions={1}
+  %ar = f32[64,128]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %rs = f32[64,8]{1,0} reduce-scatter(%p0), replica_groups=[32,16]<=[512], dimensions={1}
+  %cp = f32[64,128]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  ROOT %out = f32[64,128]{1,0} add(%ar, %cp)
+}
+"""
+
+
+def test_collective_bytes_ring_formulas():
+    st = RL.collective_bytes(HLO, n_devices=512)
+    b = 64 * 128 * 4
+    # all-gather: out 64x2048 f32, groups of 16 -> out*(15/16)
+    assert st.op_bytes["all-gather"] == int(64 * 2048 * 4 * 15 / 16)
+    # all-reduce: 2*in*(g-1)/g with g=4
+    assert st.op_bytes["all-reduce"] == int(2 * b * 3 / 4)
+    # reduce-scatter: out*(g-1) with g=16
+    assert st.op_bytes["reduce-scatter"] == 64 * 8 * 4 * 15
+    # collective-permute: out bytes
+    assert st.op_bytes["collective-permute"] == b
+    assert st.wire_bytes == sum(st.op_bytes.values())
+    assert st.op_count["all-gather"] == 1
+
+
+def test_collective_bytes_ignores_non_collectives():
+    st = RL.collective_bytes("%x = f32[8]{0} add(%a, %b)", 8)
+    assert st.wire_bytes == 0
+
+
+def test_model_flops_lm_train_scale():
+    entry = registry.get("tinyllama-1.1b")
+    spec = registry.get_shape("tinyllama-1.1b", "train_4k")
+    f = model_flops_for("tinyllama-1.1b", "train_4k", entry, spec)
+    # 6 * 1.1e9 params * 1M tokens ~ 6.9e15
+    assert 5e15 < f < 9e15
+
+
+def test_model_flops_moe_uses_active_params():
+    entry = registry.get("qwen2-moe-a2.7b")
+    spec = registry.get_shape("qwen2-moe-a2.7b", "train_4k")
+    f = model_flops_for("qwen2-moe-a2.7b", "train_4k", entry, spec)
+    dense_equiv = 6.0 * entry.config.param_count * 4096 * 256
+    assert f < dense_equiv / 2  # active << total for 60-expert top-4
+
+
+def test_roofline_terms_and_bottleneck():
+    r = RL.Roofline(arch="a", shape="s", mesh="single",
+                    flops=197e12, hlo_bytes=819e9 * 2, wire_bytes=0,
+                    model_flops=197e12 * 256 * 0.5, n_devices=256,
+                    per_device_mem=0, collective_detail={})
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.bottleneck == "memory"
+    assert r.roofline_fraction == pytest.approx(0.25)
+    assert r.useful_flop_ratio == pytest.approx(0.5)

@@ -1,0 +1,151 @@
+"""Paged KV cache (slice-pool allocator applied to serving): allocator
+invariants, chain->page-table flattening, attention equivalence."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pointers import PoolLayout
+from repro.kernels import ops, ref
+from repro.paged import kv_cache as P
+
+LAYOUT = PoolLayout(z=(6, 8, 10), slices_per_pool=(64, 32, 16))
+
+
+def _cfg(L=2, Hkv=2, D=16, max_seqs=8, dtype="float32"):
+    return P.PagedKVConfig(layout=LAYOUT, n_layers=L, n_kv_heads=Hkv,
+                           d_head=D, max_seqs=max_seqs, dtype=dtype)
+
+
+def _run_appends(cfg, steps, active, rng):
+    """Append `steps` tokens for `active` sequences; return state + the
+    dense reference [L, max_seqs, steps, Hkv, D] for K."""
+    state = P.init_kv_state(cfg)
+    append = P.make_append_fn(cfg)
+    dense_k = np.zeros((cfg.n_layers, cfg.max_seqs, steps,
+                        cfg.n_kv_heads, cfg.d_head), np.float32)
+    dense_v = np.zeros_like(dense_k)
+    seq_ids = jnp.asarray(active, jnp.int32)
+    for t in range(steps):
+        k = rng.normal(size=(cfg.n_layers, len(active), cfg.n_kv_heads,
+                             cfg.d_head)).astype(np.float32)
+        v = rng.normal(size=k.shape).astype(np.float32)
+        dense_k[:, active, t] = k
+        dense_v[:, active, t] = v
+        state = append(state, seq_ids, jnp.asarray(k), jnp.asarray(v))
+    return state, dense_k, dense_v
+
+
+def test_append_lengths_and_slots():
+    cfg = _cfg()
+    rng = np.random.default_rng(0)
+    steps = 100
+    state, _, _ = _run_appends(cfg, steps, [0, 3, 5], rng)
+    assert not bool(state.overflow)
+    lengths = np.asarray(state.length)
+    assert lengths[0] == lengths[3] == lengths[5] == steps
+    assert lengths[1] == 0
+    # slots allocated == 3 sequences x analytical kv step function
+    got = P.kv_slots_allocated(cfg, state)
+    want = 3 * int(P.kv_memory_slots(LAYOUT.z, [steps])[0])
+    assert got == want
+
+
+def test_kv_memory_slots_model():
+    # z=(6,8,10): 64, then +256, then +1024 ...
+    assert P.kv_memory_slots((6, 8, 10), [1])[0] == 64
+    assert P.kv_memory_slots((6, 8, 10), [64])[0] == 64
+    assert P.kv_memory_slots((6, 8, 10), [65])[0] == 64 + 256
+    assert P.kv_memory_slots((6, 8, 10), [320])[0] == 320
+    assert P.kv_memory_slots((6, 8, 10), [321])[0] == 320 + 1024
+
+
+def test_page_table_and_gather_roundtrip():
+    cfg = _cfg()
+    rng = np.random.default_rng(1)
+    steps = 330  # spans all three pools: 64 + 256 + 1024-slice
+    active = [1, 4]
+    state, dense_k, dense_v = _run_appends(cfg, steps, active, rng)
+    max_pages = 16
+    tables = P.make_page_table_fn(cfg, max_pages)(
+        state, jnp.asarray(active, jnp.int32))
+    t = np.asarray(tables)
+    n_pages = -(-steps // P.PAGE)
+    assert (t[:, :n_pages] >= 0).all() and (t[:, n_pages:] == -1).all()
+    for layer in range(cfg.n_layers):
+        k, v = P.gather_kv(state, tables, layer)
+        k = np.asarray(k)[:, :steps]
+        np.testing.assert_allclose(
+            k, dense_k[layer][active], rtol=0, atol=0)
+
+
+def test_paged_attention_on_allocator_state():
+    """End-to-end: allocator-produced page tables + Pallas kernel ==
+    dense attention over the same history."""
+    cfg = _cfg(L=1, Hkv=2, D=32)
+    rng = np.random.default_rng(2)
+    steps = 150
+    active = [0, 2]
+    state, dense_k, dense_v = _run_appends(cfg, steps, active, rng)
+    tables = P.make_page_table_fn(cfg, 8)(
+        state, jnp.asarray(active, jnp.int32))
+    G = 2
+    q = jnp.asarray(rng.normal(size=(2, cfg.n_kv_heads, G, cfg.d_head)),
+                    jnp.float32)
+    lengths = state.length[jnp.asarray(active)]
+    out = ops.paged_attention(q, state.k_heap[0], state.v_heap[0],
+                              tables, lengths, interpret=True)
+    # dense reference
+    k = jnp.asarray(dense_k[0][active])   # [B, T, Hkv, D]
+    v = jnp.asarray(dense_v[0][active])
+    s = jnp.einsum("bhgd,bthd->bhgt", q, k) * (cfg.d_head ** -0.5)
+    dense = jnp.einsum("bhgt,bthd->bhgd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_ragged_lengths_batched_allocation():
+    """Sequences join at different times; per-pool prefix-sum allocation
+    must never hand out the same slice twice."""
+    cfg = _cfg(L=1, Hkv=1, D=8, max_seqs=16)
+    state = P.init_kv_state(cfg)
+    append = P.make_append_fn(cfg)
+    rng = np.random.default_rng(3)
+    joined = []
+    for t in range(80):
+        if t % 10 == 0 and len(joined) < 12:
+            joined.append(len(joined))
+        ids = jnp.asarray(joined, jnp.int32)
+        k = jnp.asarray(rng.normal(size=(1, len(joined), 1, 8)),
+                        jnp.float32)
+        state = append(state, ids, k, k)
+    assert not bool(state.overflow)
+    lens = np.asarray(state.length)[:len(joined)]
+    assert lens[0] == 80 and lens[-1] > 0
+    # no slice double-handout: every sequence's pages are disjoint
+    tables = P.make_page_table_fn(cfg, 8)(
+        state, jnp.arange(len(joined), dtype=jnp.int32))
+    t = np.asarray(tables)
+    used = t[t >= 0]
+    assert len(used) == len(np.unique(used))
+
+
+def test_goldilocks_tradeoff_transfers_to_kv():
+    """Paper's C_M story on KV: small slices waste less memory for short
+    sequences; large slices touch fewer discontiguous regions."""
+    lens = np.asarray([10, 50, 100, 500, 2000])
+    small = P.kv_memory_slots((6, 7, 8), lens).sum()
+    big = P.kv_memory_slots((10, 11, 12), lens).sum()
+    assert small < big  # memory: small slices win
+    # fragmentation: slices touched (chain length) higher for small Z
+    def n_slices(z, n):
+        th = P.kv_memory_slots(z, [n])[0]
+        sizes = [1 << zz for zz in z]
+        c, i, acc = 0, 0, 0
+        while acc < n:
+            acc += sizes[min(i, len(z) - 1)]
+            i += 1
+            c += 1
+        return c
+    assert n_slices((6, 7, 8), 2000) > n_slices((10, 11, 12), 2000)

@@ -1,0 +1,80 @@
+"""Pointer packing: round-trips, bit-budget validation, NULL reservation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pointers
+from repro.core.pointers import NULL, PoolLayout
+
+
+def _layout(z):
+    return PoolLayout(z=tuple(z), slices_per_pool=tuple(8 for _ in z))
+
+
+@st.composite
+def layout_and_coords(draw):
+    P = draw(st.sampled_from([2, 4, 8]))
+    z = draw(st.lists(st.integers(0, 12), min_size=P, max_size=P,
+                      unique=True).map(sorted))
+    layout = _layout(z)
+    pool = draw(st.integers(0, P - 1))
+    max_slice = layout.max_slices(pool) - 1
+    sl = draw(st.integers(0, min(max_slice, 1 << 16)))
+    off = draw(st.integers(0, layout.slice_sizes[pool] - 1))
+    return layout, pool, sl, off
+
+
+@given(layout_and_coords())
+@settings(max_examples=200, deadline=None)
+def test_roundtrip_host(args):
+    layout, pool, sl, off = args
+    ptr = pointers.encode_host(layout, pool, sl, off)
+    assert ptr != int(NULL), "valid pointer must never equal NULL"
+    assert pointers.decode_host(layout, ptr) == (pool, sl, off)
+
+
+@given(layout_and_coords())
+@settings(max_examples=50, deadline=None)
+def test_roundtrip_device_matches_host(args):
+    layout, pool, sl, off = args
+    tbl = layout.tables()
+    enc = pointers.encode(tbl, layout.pool_bits, jnp.uint32(pool),
+                          jnp.uint32(sl), jnp.uint32(off))
+    assert int(enc) == pointers.encode_host(layout, pool, sl, off)
+    dec = pointers.decode(tbl, layout.pool_bits, enc)
+    assert tuple(int(x) for x in dec) == (pool, sl, off)
+
+
+def test_production_layout_matches_paper():
+    layout = pointers.production_layout()
+    assert layout.z == (1, 4, 7, 11)
+    assert layout.pool_bits == 2                      # "2 bits ... pool"
+    assert layout.slice_bits == (29, 26, 23, 19)      # "19-29 bits ... slice"
+    assert layout.slice_sizes == (2, 16, 128, 2048)   # "1-11 bits ... offset"
+
+
+def test_layout_validation():
+    with pytest.raises(ValueError):
+        PoolLayout(z=(4, 4), slices_per_pool=(8, 8))          # not increasing
+    with pytest.raises(ValueError):
+        PoolLayout(z=(1, 31), slices_per_pool=(8, 8))         # no slice bits
+    with pytest.raises(ValueError):
+        PoolLayout(z=(1, 29), slices_per_pool=(8, 1 << 30))   # too many slices
+
+
+def test_null_slice_reserved_in_last_pool():
+    layout = _layout([1, 4])
+    last = layout.num_pools - 1
+    assert layout.max_slices(last) == (1 << layout.slice_bits[last]) - 1
+
+
+def test_addr_is_within_pool_bounds():
+    layout = PoolLayout(z=(1, 4, 7, 11), slices_per_pool=(16, 8, 4, 2))
+    tbl = layout.tables()
+    for p in range(4):
+        for s in range(layout.slices_per_pool[p]):
+            a = int(pointers.to_addr(tbl, jnp.uint32(p), jnp.uint32(s),
+                                     jnp.uint32(0)))
+            base = layout.pool_base[p]
+            assert base <= a < base + layout.pool_slots[p]

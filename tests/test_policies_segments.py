@@ -1,0 +1,114 @@
+"""SP policies (§7) + segment lifecycle (§3.1) + history/churn."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analytical, history, policies, segments
+from repro.core.index import ActiveSegment
+from repro.core.pointers import PoolLayout
+from repro.core.query import make_engine
+from repro.data import synth
+
+from conftest import PROD_Z, max_slices_for
+
+Z = PROD_Z
+
+
+def test_sp_ceil():
+    # sizes: 2, 16, 128, 2048
+    h = jnp.asarray([0, 1, 2, 3, 16, 17, 128, 2048, 100_000])
+    got = policies.sp_ceil(Z, h)
+    #              OOV 1  2  3  16 17  128  2048 huge
+    assert got.tolist() == [0, 0, 0, 1, 1, 2, 2, 3, 3]
+
+
+def test_sp_floor():
+    h = jnp.asarray([0, 1, 2, 3, 15, 16, 127, 128, 2048, 100_000])
+    got = policies.sp_floor(Z, h)
+    assert got.tolist() == [0, 0, 0, 0, 0, 1, 1, 2, 3, 3]
+
+
+def test_sp_lambda():
+    h = jnp.asarray([0, 1, 2047, 2048, 5000])
+    got = policies.sp_lambda(Z, h)
+    assert got.tolist() == [0, 0, 0, 3, 3]
+
+
+def test_sp_policies_waste_memory_without_history_value():
+    """Reproduces the paper's §9.2 finding qualitatively: with churn,
+    ceil-policy uses more memory than the default."""
+    spec = synth.CorpusSpec(vocab=3000, n_docs=1200, seed=3)
+    first, second = synth.corpus_halves(spec)
+    hist = synth.term_freqs(first, spec.vocab)
+    layout = PoolLayout(z=Z, slices_per_pool=(8192, 4096, 2048, 512))
+
+    def run(policy):
+        seg = ActiveSegment(layout, spec.vocab)
+        table = policies.start_pools_for_vocab(policy, Z, hist)
+        seg.ingest(jnp.asarray(second), term_start_pools=table)
+        seg.check_health()
+        return seg.memory_slots_used()
+
+    default = run("sp_default")
+    ceil = run("sp_ceil")
+    lam = run("sp_lambda")
+    assert ceil > default           # Table 2: SP(ceil) most wasteful
+    assert lam >= default           # Table 2: SP(Lambda) ~= default
+    assert (lam - default) <= (ceil - default)
+
+
+def test_segment_rollover_and_multisegment_search():
+    spec = synth.CorpusSpec(vocab=500, n_docs=300, seed=1)
+    docs = synth.zipf_corpus(spec)
+    layout = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 512, 64))
+    ss = segments.SegmentSet(layout, spec.vocab, docs_per_segment=100)
+    for i in range(3):
+        ss.ingest(jnp.asarray(docs[i * 100:(i + 1) * 100]))
+    # third batch fills the segment exactly -> sealed on ingest
+    assert len(ss.frozen) == 3 and ss.active.next_docid == 0
+    freqs = synth.term_freqs(docs, spec.vocab)
+    t = int(np.argmax(freqs))
+    eng = make_engine(layout, max_slices_for(Z, freqs), 512)
+    got = ss.search_term_desc(t, eng, limit=10_000)
+    exp = np.nonzero((docs == t).any(axis=1))[0][::-1]
+    assert np.array_equal(got, exp)
+
+
+def test_history_freqs_from_frozen():
+    spec = synth.CorpusSpec(vocab=400, n_docs=200, seed=2)
+    docs = synth.zipf_corpus(spec)
+    layout = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 512, 64))
+    ss = segments.SegmentSet(layout, spec.vocab, docs_per_segment=200)
+    ss.ingest(jnp.asarray(docs))
+    assert len(ss.frozen) == 1
+    assert np.array_equal(ss.history_freqs(),
+                          synth.term_freqs(docs, spec.vocab))
+
+
+def test_churn_metric():
+    a = np.asarray([100, 90, 80, 1, 1])
+    assert history.churn(a, a, top_k=3) == 0.0          # identical -> 0
+    b = np.asarray([1, 90, 80, 100, 1])                 # term 0 fell out
+    assert history.churn(a, b, top_k=3) == pytest.approx(1 / 3)
+    c = np.asarray([1, 1, 80, 100, 90])                 # whole top-2 churned
+    assert history.churn(a, c, top_k=2) == pytest.approx(1.0)
+
+
+def test_codec_roundtrip_random():
+    rng = np.random.default_rng(0)
+    for n in [1, 2, 127, 128, 129, 1000]:
+        vals = np.sort(rng.choice(1 << 30, size=n, replace=False))
+        codec = segments.ForBlocks.encode(vals.astype(np.uint64))
+        assert np.array_equal(codec.decode(), vals)
+
+
+def test_compression_shrinks_dense_lists():
+    spec = synth.CorpusSpec(vocab=200, n_docs=400, seed=5)
+    docs = synth.zipf_corpus(spec)
+    layout = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 512, 64))
+    seg = ActiveSegment(layout, spec.vocab)
+    seg.ingest(jnp.asarray(docs))
+    fz = segments.freeze(seg)
+    _, packed = segments.compress_segment(fz)
+    raw = fz.data.nbytes
+    assert packed < raw, (packed, raw)

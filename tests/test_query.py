@@ -1,0 +1,132 @@
+"""Query evaluation vs brute-force reference + set-op property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytical, query
+from repro.core.query import INVALID
+from repro.data import synth
+
+from conftest import PROD_Z, max_slices_for
+
+
+@pytest.fixture(scope="module")
+def engine(indexed_segment, small_layout):
+    seg, docs, freqs = indexed_segment
+    return query.make_engine(small_layout, max_slices_for(PROD_Z, freqs),
+                             max_len=1024)
+
+
+def _docs_with(docs, t):
+    return set(np.nonzero((docs == t).any(axis=1))[0].tolist())
+
+
+def test_conjunctive_matches_bruteforce(indexed_segment, engine):
+    seg, docs, freqs = indexed_segment
+    top = np.argsort(-freqs)
+    for a, b in [(0, 1), (2, 5), (1, 20), (10, 50)]:
+        t1, t2 = int(top[a]), int(top[b])
+        q = jnp.asarray([t1, t2, 0, 0, 0, 0, 0, 0], jnp.uint32)
+        ids, n = engine.conjunctive(seg.state, q, jnp.int32(2))
+        got = np.asarray(ids)[: int(n)].astype(np.int64)
+        exp = sorted(_docs_with(docs, t1) & _docs_with(docs, t2),
+                     reverse=True)
+        assert got.tolist() == exp
+
+
+def test_three_term_conjunction(indexed_segment, engine):
+    seg, docs, freqs = indexed_segment
+    top = np.argsort(-freqs)
+    t = [int(top[i]) for i in range(3)]
+    q = jnp.asarray(t + [0] * 5, jnp.uint32)
+    ids, n = engine.conjunctive(seg.state, q, jnp.int32(3))
+    exp = sorted(_docs_with(docs, t[0]) & _docs_with(docs, t[1])
+                 & _docs_with(docs, t[2]), reverse=True)
+    assert np.asarray(ids)[: int(n)].astype(np.int64).tolist() == exp
+
+
+def test_disjunctive_matches_bruteforce(indexed_segment, engine):
+    seg, docs, freqs = indexed_segment
+    top = np.argsort(-freqs)
+    t1, t2 = int(top[3]), int(top[7])
+    q = jnp.asarray([t1, t2, 0, 0, 0, 0, 0, 0], jnp.uint32)
+    ids, n = engine.disjunctive(seg.state, q, jnp.int32(2))
+    exp = sorted(_docs_with(docs, t1) | _docs_with(docs, t2), reverse=True)
+    assert np.asarray(ids)[: int(n)].astype(np.int64).tolist() == exp
+
+
+def test_phrase_matches_bruteforce(indexed_segment, engine):
+    seg, docs, freqs = indexed_segment
+    top = np.argsort(-freqs)
+    t1, t2 = int(top[0]), int(top[1])
+    exp = set()
+    for d in range(docs.shape[0]):
+        row = docs[d]
+        for i in range(len(row) - 1):
+            if row[i] == t1 and row[i + 1] == t2:
+                exp.add(d)
+    ids, n = engine.phrase(seg.state, jnp.uint32(t1), jnp.uint32(t2))
+    got = set(np.asarray(ids)[: int(n)].tolist())
+    assert got == exp
+
+
+def test_results_reverse_chronological(indexed_segment, engine):
+    seg, docs, freqs = indexed_segment
+    t = int(np.argmax(freqs))
+    q = jnp.asarray([t] + [0] * 7, jnp.uint32)
+    ids, n = engine.conjunctive(seg.state, q, jnp.int32(1))
+    got = np.asarray(ids)[: int(n)].astype(np.int64)
+    assert np.all(np.diff(got) < 0), "must be strictly descending docids"
+
+
+def test_empty_intersection(indexed_segment, engine):
+    seg, docs, freqs = indexed_segment
+    # a term that never occurs
+    unused = int(np.nonzero(freqs == 0)[0][0])
+    t = int(np.argmax(freqs))
+    q = jnp.asarray([t, unused] + [0] * 6, jnp.uint32)
+    ids, n = engine.conjunctive(seg.state, q, jnp.int32(2))
+    assert int(n) == 0
+
+
+# ---------------------------------------------------------------------------
+# Set-op properties on synthetic arrays
+# ---------------------------------------------------------------------------
+def _pad_asc(xs, width):
+    arr = np.full(width, 0xFFFFFFFF, np.uint32)
+    xs = np.unique(np.asarray(xs, np.uint32))
+    arr[: len(xs)] = xs
+    return jnp.asarray(arr), jnp.int32(len(xs))
+
+
+sets = st.lists(st.integers(0, 200), min_size=0, max_size=40)
+
+
+@given(sets, sets)
+@settings(max_examples=100, deadline=None)
+def test_intersect_property(a, b):
+    A, na = _pad_asc(a, 64)
+    B, nb = _pad_asc(b, 64)
+    out, n = query.intersect_asc(A, na, B, nb)
+    got = np.asarray(out)[: int(n)].tolist()
+    assert got == sorted(set(a) & set(b))
+
+
+@given(sets, sets)
+@settings(max_examples=100, deadline=None)
+def test_union_property(a, b):
+    A, na = _pad_asc(a, 64)
+    B, nb = _pad_asc(b, 64)
+    out, n = query.union_asc(A, na, B, nb)
+    got = np.asarray(out)[: int(n)].tolist()
+    assert got == sorted(set(a) | set(b))
+
+
+@given(sets)
+@settings(max_examples=50, deadline=None)
+def test_asc_desc_inverse(a):
+    A, na = _pad_asc(a, 64)
+    d = query.asc_to_desc(A, na)
+    back = query.desc_to_asc(d, na)
+    assert np.array_equal(np.asarray(back), np.asarray(A))

@@ -1,0 +1,132 @@
+"""Allocator invariants: exact agreement with the paper's step function,
+reference-index equivalence, overflow safety, SP start pools."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytical, pointers, slicepool
+from repro.core.index import ActiveSegment
+from repro.core.pointers import NULL, PoolLayout
+from repro.data import synth
+
+from conftest import max_slices_for
+
+
+def _ingest_freqs(z, freqs, start_pools_per_term=None):
+    """Insert term t exactly freqs[t] times; return final state."""
+    layout = PoolLayout(z=z, slices_per_pool=tuple(4096 for _ in z))
+    V = len(freqs)
+    terms = np.repeat(np.arange(V, dtype=np.uint32), freqs)
+    posts = np.arange(len(terms), dtype=np.uint32)
+    ingest = slicepool.make_ingest_fn(layout, V)
+    state = slicepool.init_state(layout, V)
+    sp = None
+    if start_pools_per_term is not None:
+        sp = jnp.asarray(np.asarray(start_pools_per_term, np.uint32)[terms])
+    state = ingest(state, jnp.asarray(terms), jnp.asarray(posts), sp)
+    return layout, state
+
+
+@st.composite
+def z_and_freqs(draw):
+    P = draw(st.sampled_from([2, 4, 5, 8]))
+    z = tuple(sorted(draw(st.lists(st.integers(0, 10), min_size=P,
+                                   max_size=P, unique=True))))
+    freqs = draw(st.lists(st.integers(1, 400), min_size=1, max_size=6))
+    return z, freqs
+
+
+@given(z_and_freqs())
+@settings(max_examples=25, deadline=None)
+def test_slots_match_step_function_exactly(zf):
+    """C_M* == sum_t M(f_t): the allocator realises the paper's M exactly."""
+    z, freqs = zf
+    layout, state = _ingest_freqs(z, freqs)
+    assert not bool(state.overflow)
+    got = slicepool.memory_slots_used(layout, state)
+    want = int(analytical.memory_slots(z, np.asarray(freqs)).sum())
+    assert got == want
+    assert np.array_equal(np.asarray(state.freq), freqs)
+
+
+@given(z_and_freqs())
+@settings(max_examples=15, deadline=None)
+def test_materialized_postings_roundtrip(zf):
+    """Everything written comes back, newest-first, per term."""
+    z, freqs = zf
+    layout, state = _ingest_freqs(z, freqs)
+    mat = slicepool.make_materializer(
+        layout, max_slices_for(z, freqs), max_len=512)
+    V = len(freqs)
+    terms = np.repeat(np.arange(V, dtype=np.uint32), freqs)
+    posts = np.arange(len(terms), dtype=np.uint32)
+    for t in range(V):
+        vals, n = mat(state, jnp.uint32(t))
+        assert int(n) == freqs[t]
+        exp = posts[terms == t][::-1]
+        assert np.array_equal(np.asarray(vals)[: int(n)], exp)
+
+
+def test_overflow_sets_flag_and_preserves_data():
+    layout = PoolLayout(z=(1, 4), slices_per_pool=(2, 1))
+    ingest = slicepool.make_ingest_fn(layout, 1)
+    state = slicepool.init_state(layout, 1)
+    # capacity: 2*2 postings in pool0 for 1 term -> slice0 holds 2; then
+    # pool1 slice holds 15; then pool1 again but only 1 slice -> overflow.
+    n = 2 + 15 + 5
+    state = ingest(state, jnp.zeros(n, jnp.uint32),
+                   jnp.arange(n, dtype=jnp.uint32))
+    assert bool(state.overflow)
+    # postings written before exhaustion are intact
+    mat = slicepool.make_materializer(layout, 4, 32)
+    vals, cnt = mat(state, jnp.uint32(0))
+    assert int(cnt) == 17
+    assert np.array_equal(np.asarray(vals)[:17],
+                          np.arange(17, dtype=np.uint32)[::-1])
+
+
+@pytest.mark.parametrize("start_pool", [0, 1, 2, 3])
+def test_sp_start_pool_honoured(start_pool):
+    z = (1, 4, 7, 11)
+    layout, state = _ingest_freqs(z, [1], start_pools_per_term=[start_pool])
+    # exactly one slice allocated, in the requested pool
+    wm = np.asarray(state.watermark)
+    exp = np.zeros(4, np.int32)
+    exp[start_pool] = 1
+    assert np.array_equal(wm, exp)
+    # tail pointer decodes to that pool
+    tbl = layout.tables()
+    pool, _, off = pointers.decode(tbl, layout.pool_bits, state.tail[0])
+    assert int(pool) == start_pool
+    assert int(off) == (1 if start_pool > 0 else 0)  # ptr slot skipped
+
+
+def test_sp_memory_matches_analytical_extension():
+    """memory_slots_sp agrees with the allocator for non-zero start pools."""
+    z = (1, 4, 7, 11)
+    for sp in range(4):
+        for f in [1, 2, 3, 15, 16, 40, 200, 3000]:
+            layout, state = _ingest_freqs(z, [f], start_pools_per_term=[sp])
+            got = slicepool.memory_slots_used(layout, state)
+            want = int(analytical.memory_slots_sp(z, [f], [sp])[0])
+            assert got == want, (sp, f, got, want)
+
+
+def test_zero_copy_invariant():
+    """Old postings bytes are never rewritten by later inserts."""
+    z = (1, 4, 7, 11)
+    layout = PoolLayout(z=z, slices_per_pool=(64, 32, 16, 8))
+    ingest = slicepool.make_ingest_fn(layout, 4)
+    state = slicepool.init_state(layout, 4)
+    rng = np.random.default_rng(0)
+    terms = rng.integers(0, 4, 500).astype(np.uint32)
+    posts = np.arange(500, dtype=np.uint32)
+    snapshots = []
+    for chunk in range(5):
+        sl = slice(chunk * 100, (chunk + 1) * 100)
+        state = ingest(state, jnp.asarray(terms[sl]), jnp.asarray(posts[sl]))
+        snapshots.append(np.asarray(state.heap).copy())
+    for a, b in zip(snapshots, snapshots[1:]):
+        written = a != 0
+        assert np.array_equal(a[written], b[written])
