@@ -1,0 +1,16 @@
+"""SPMD layer: logical-axis sharding rules + mesh-aware collectives.
+
+``repro.dist.sharding`` maps the model code's LOGICAL axis names
+("batch", "seq", "model", "expert", ...) onto physical mesh axes via a
+per-run ``Rules`` table; ``repro.dist.collectives`` provides the matching
+axis-name-aware collective helpers and the CPU multi-device fallback used
+by CI (``--xla_force_host_platform_device_count``).
+"""
+from repro.dist.sharding import (  # noqa: F401
+    Rules,
+    constrain,
+    current_rules,
+    default_rules,
+    tree_shardings,
+    use_rules,
+)

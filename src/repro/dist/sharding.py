@@ -1,0 +1,182 @@
+"""Logical-axis sharding rules (the GSPMD naming layer).
+
+Model code never names mesh axes.  It annotates activations with LOGICAL
+axis names — ``constrain(x, "batch", None, "model", None)`` — and
+parameter trees with logical spec tuples — ``("fsdp", "model")``.  A
+:class:`Rules` object owns the translation: a table mapping each logical
+name to a physical mesh axis (a string), an axis TUPLE (the dimension is
+sharded over several mesh axes jointly, e.g. ``batch -> ("pod", "data")``),
+or ``None`` (replicated).
+
+Why the indirection: the same model source serves every parallelism
+scheme.  Data parallel, FSDP, tensor parallel, expert parallel and
+sequence parallel differ ONLY in the rule table (see
+``repro.launch.dryrun.rules_for`` — per-cell tables, including the
+``fsdp_pure`` hillclimb scheme that turns tensor parallelism off by
+mapping ``model -> None``).  The launcher installs a table with
+:func:`use_rules`; inside that context every ``constrain`` call becomes a
+``jax.lax.with_sharding_constraint`` and every spec tuple resolves to a
+``jax.sharding.NamedSharding``.  Outside any context (unit tests, single
+device) ``constrain`` is an exact no-op, so the jnp semantics are
+unchanged.
+
+Well-known logical names (the canonical vocabulary; tables may add more):
+
+  batch    data-parallel batch dim            -> ("pod", "data") / ("data",)
+  fsdp     parameter-shard dim (ZeRO-3)       -> data axes when FSDP is on
+  model    tensor-parallel dim (heads/ffn/vocab/experts) -> "model"
+  kv_seq   decode KV-cache sequence dim       -> "model" (sequence-TP)
+  seq      activation sequence dim            -> "model" when SP is on
+  expert   MoE expert dim                     -> "model" (expert parallel)
+  edges    GNN edge stream                    -> data axes
+  rows     recsys embedding-table rows        -> "model" (+ data when huge)
+
+Resolution rules: names absent from the table replicate (None); a mesh
+axis may appear only once per spec, so later duplicates within one spec
+are dropped (first dimension wins) — keeping every table/spec pair valid
+GSPMD input by construction.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+AxisEntry = Union[None, str, Tuple[str, ...]]
+LogicalSpec = Optional[Tuple[Optional[str], ...]]
+
+_ACTIVE: contextvars.ContextVar[Optional["Rules"]] = contextvars.ContextVar(
+    "repro_dist_rules", default=None)
+
+
+def _as_tuple(entry: AxisEntry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """A logical-name -> mesh-axes table bound to a mesh."""
+
+    mesh: Mesh
+    table: Mapping[str, AxisEntry]
+
+    def __post_init__(self):
+        axis_names = set(self.mesh.axis_names)
+        for name, entry in self.table.items():
+            for ax in _as_tuple(entry):
+                if ax not in axis_names:
+                    raise ValueError(
+                        f"rule {name!r} -> {entry!r} names mesh axis "
+                        f"{ax!r}, not in mesh axes {self.mesh.axis_names}")
+
+    def axes(self, name: Optional[str]) -> Tuple[str, ...]:
+        """Mesh axes for one logical name (() when replicated/unknown)."""
+        if name is None:
+            return ()
+        return _as_tuple(self.table.get(name))
+
+    def spec(self, logical: LogicalSpec) -> PartitionSpec:
+        """PartitionSpec for a logical spec tuple (None -> replicated).
+
+        Drops mesh axes already consumed by an earlier dimension of the
+        same spec: one mesh axis may shard at most one dimension.
+        """
+        if logical is None:
+            return PartitionSpec()
+        used: set = set()
+        dims = []
+        for name in logical:
+            axes = tuple(a for a in self.axes(name) if a not in used)
+            used.update(axes)
+            if not axes:
+                dims.append(None)
+            elif len(axes) == 1:
+                dims.append(axes[0])
+            else:
+                dims.append(axes)
+        return PartitionSpec(*dims)
+
+    def sharding(self, logical: LogicalSpec) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = False,
+                  seq_sharded: bool = False) -> Rules:
+    """The standard table for a ("pod",)? + "data" + "model" mesh.
+
+    ``fsdp`` turns on ZeRO-3 parameter sharding over the data axes;
+    ``seq_sharded`` turns on Megatron sequence parallelism over 'model'.
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model = "model" if "model" in mesh.axis_names else None
+    return Rules(mesh=mesh, table={
+        "batch": dp or None,
+        "fsdp": (dp or None) if fsdp else None,
+        "model": model,
+        "kv_seq": model,
+        "seq": model if seq_sharded else None,
+        "expert": model,
+        "edges": dp or None,
+        "rows": model,
+    })
+
+
+def current_rules() -> Optional[Rules]:
+    return _ACTIVE.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    """Install ``rules`` as the ambient table for ``constrain`` calls."""
+    token = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(token)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with the sharding its logical axes resolve to.
+
+    One logical name (or None) per dimension.  No-op when no rules are
+    active or the mesh is a single device, so model code can call this
+    unconditionally.
+    """
+    if x.ndim != len(logical):
+        # checked BEFORE the no-rules early return so wrong-rank
+        # annotations fail in single-device unit tests, not first on a pod
+        raise ValueError(
+            f"constrain got {len(logical)} logical axes for rank-{x.ndim} "
+            f"array: {logical}")
+    rules = _ACTIVE.get()
+    if rules is None or rules.mesh.devices.size == 1:
+        return x
+    spec = rules.spec(tuple(logical))
+    if all(d is None for d in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def _is_spec_leaf(s: Any) -> bool:
+    # Plain tuples are logical specs; NamedTuples (DecodeCache, optimizer
+    # states) are containers and must stay traversable.
+    return s is None or (isinstance(s, tuple) and not hasattr(s, "_fields"))
+
+
+def tree_shardings(rules: Rules, specs: Any) -> Any:
+    """Map a pytree of logical spec tuples to NamedShardings.
+
+    ``None`` leaves mean replicated.  Mirrors the tree structure of the
+    parameter pytree it will be zipped against in ``jax.jit``
+    ``in_shardings``/``out_shardings``.
+    """
+    return jax.tree.map(rules.sharding, specs, is_leaf=_is_spec_leaf)

@@ -16,8 +16,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import pl, pltpu
 
 
 def _kernel(offsets_ref, idx_ref, table_hbm, o_ref, row_buf, sem,

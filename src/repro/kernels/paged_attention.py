@@ -22,8 +22,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import pl, pltpu
 
 PAGE = 64
 NEG_INF = -1e30  # python float: jnp constants would be captured consts

@@ -18,8 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import pl, pltpu
 
 INVALID = 0xFFFFFFFF
 

@@ -1,7 +1,9 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any jax import (device count locks on
-# first backend init).  Everything below may import jax.
+from repro.dist.collectives import force_host_device_count
+force_host_device_count(512)
+# The lines above MUST run before any jax backend init (device count locks
+# on first init); importing jax itself is safe.  Everything below may
+# import jax.
 
 import argparse            # noqa: E402
 import functools           # noqa: E402

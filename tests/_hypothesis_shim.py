@@ -1,0 +1,162 @@
+"""Minimal, API-compatible stand-in for ``hypothesis`` (offline CI).
+
+Installed into ``sys.modules`` by ``conftest.py`` ONLY when the real
+hypothesis is not importable, so an environment with hypothesis gets the
+real shrinking/coverage machinery and this shim never shadows it.
+
+Scope: exactly the surface this repo's property tests use —
+``given``/``settings`` decorators (either stacking order) and the
+``strategies`` namespace with ``integers``, ``floats``, ``lists``,
+``sampled_from``, ``composite`` plus ``Strategy.map``.  Draws are backed
+by a per-test seeded ``random.Random``, so runs are deterministic; there
+is no shrinking and no example database.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rnd: random.Random):
+        return self._draw_fn(rnd)
+
+    def map(self, fn):
+        return Strategy(lambda rnd: fn(self.draw(rnd)))
+
+    def filter(self, pred, _max_tries: int = 1000):
+        def draw(rnd):
+            for _ in range(_max_tries):
+                v = self.draw(rnd)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate never satisfied")
+        return Strategy(draw)
+
+
+def _integers(min_value, max_value):
+    return Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value):
+    return Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def _booleans():
+    return Strategy(lambda rnd: rnd.random() < 0.5)
+
+
+def _sampled_from(elements):
+    seq = list(elements)
+    return Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+
+def _just(value):
+    return Strategy(lambda rnd: value)
+
+
+def _lists(elements: Strategy, *, min_size=0, max_size=None, unique=False):
+    if max_size is None:
+        max_size = min_size + 10
+
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        if not unique:
+            return [elements.draw(rnd) for _ in range(n)]
+        seen, out = set(), []
+        tries = 0
+        while len(out) < n and tries < 200 * max(n, 1):
+            v = elements.draw(rnd)
+            tries += 1
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        if len(out) < min_size:
+            raise RuntimeError(
+                f"could not draw {min_size} unique elements")
+        return out
+
+    return Strategy(draw)
+
+
+def _tuples(*strategies):
+    return Strategy(lambda rnd: tuple(s.draw(rnd) for s in strategies))
+
+
+def _composite(fn):
+    """``@st.composite`` — fn's first parameter is the draw function."""
+    @functools.wraps(fn)
+    def make(*args, **kwargs):
+        def draw_value(rnd):
+            return fn(lambda s: s.draw(rnd), *args, **kwargs)
+        return Strategy(draw_value)
+    return make
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.booleans = _booleans
+strategies.lists = _lists
+strategies.tuples = _tuples
+strategies.sampled_from = _sampled_from
+strategies.just = _just
+strategies.composite = _composite
+strategies.Strategy = Strategy
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Records max_examples on the function; other knobs are ignored."""
+    def deco(fn):
+        fn._shim_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*given_strategies: Strategy):
+    def deco(fn):
+        # Like real hypothesis, strategies fill the TRAILING parameters;
+        # anything before them (pytest fixtures) passes through untouched.
+        params = list(inspect.signature(fn).parameters.values())
+        filled = [p.name for p in params[len(params) - len(given_strategies):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_shim_settings",
+                           getattr(fn, "_shim_settings", {}))
+            n = conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            # Seeded per-test: deterministic across runs, distinct per test.
+            rnd = random.Random(fn.__name__)
+            for _ in range(n):
+                drawn = {name: s.draw(rnd)
+                         for name, s in zip(filled, given_strategies)}
+                fn(*args, **kwargs, **drawn)
+        # Strategy-filled params must not look like pytest fixtures: strip
+        # them from the visible signature and drop __wrapped__ so pytest
+        # doesn't unwrap.
+        wrapper.__signature__ = inspect.Signature(
+            params[:len(params) - len(given_strategies)])
+        del wrapper.__wrapped__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco
+
+
+class HealthCheck:  # referenced by some suppress_health_check settings
+    all = staticmethod(lambda: [])
+
+
+def seed(_value):
+    def deco(fn):
+        return fn
+    return deco
+
+
+__version__ = "0.0-shim"

@@ -1,6 +1,17 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
-see the single real CPU device; only launch/dryrun.py forces 512 host
-devices (and only when run as its own process)."""
+"""Shared fixtures. NOTE: no XLA_FLAGS set here — the in-process suite
+runs on whatever the environment provides: 1 real CPU device locally, 4
+forced host devices in CI (.github/workflows/ci.yml). Tests must not
+assume a specific device count; subprocess tests (spmd equivalence,
+launch/dryrun.py) force their own counts in their own processes."""
+import sys
+
+try:                                   # prefer the real hypothesis…
+    import hypothesis  # noqa: F401
+except ImportError:                    # …fall back to the seeded shim
+    import _hypothesis_shim
+    sys.modules["hypothesis"] = _hypothesis_shim
+    sys.modules["hypothesis.strategies"] = _hypothesis_shim.strategies
+
 import numpy as np
 import pytest
 

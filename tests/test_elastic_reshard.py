@@ -12,8 +12,8 @@ import sys
 import textwrap
 
 SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.dist.collectives import force_host_device_count
+    force_host_device_count(8)
     import json, tempfile
     import numpy as np
     import jax, jax.numpy as jnp

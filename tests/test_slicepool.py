@@ -86,6 +86,57 @@ def test_overflow_sets_flag_and_preserves_data():
                           np.arange(17, dtype=np.uint32)[::-1])
 
 
+def test_overflow_sticky_and_nonallocating_inserts_still_land():
+    """The overflow bit is STICKY: once any allocation fails it stays set,
+    even across later batches whose inserts succeed.  Inserts needing a
+    fresh slice are dropped after exhaustion; inserts into a non-full
+    slice still land."""
+    layout = PoolLayout(z=(1, 4), slices_per_pool=(2, 1))
+    ingest = slicepool.make_ingest_fn(layout, 2)
+    state = slicepool.init_state(layout, 2)
+    # term 0: 2 (pool0 slice) + 15 (the only pool1 slice) fit; the 18th
+    # posting needs a second pool1 slice -> overflow.
+    state = ingest(state, jnp.zeros(18, jnp.uint32),
+                   jnp.arange(18, dtype=jnp.uint32))
+    assert bool(state.overflow)
+    assert int(state.freq[0]) == 17
+
+    # term 1 allocates pool0's second slice: the insert SUCCEEDS and the
+    # overflow bit must remain set.
+    state = ingest(state, jnp.ones(1, jnp.uint32),
+                   jnp.asarray([100], jnp.uint32))
+    assert bool(state.overflow), "overflow bit must be sticky"
+    assert int(state.freq[1]) == 1
+    # second posting fills the slice (pool 0 has no pointer slot)...
+    state = ingest(state, jnp.ones(1, jnp.uint32),
+                   jnp.asarray([101], jnp.uint32))
+    assert int(state.freq[1]) == 2
+    # ...and the third needs a pool1 slice that no longer exists: no-op.
+    state = ingest(state, jnp.ones(1, jnp.uint32),
+                   jnp.asarray([102], jnp.uint32))
+    assert int(state.freq[1]) == 2
+    assert bool(state.overflow)
+    mat = slicepool.make_materializer(layout, 4, 32)
+    vals, cnt = mat(state, jnp.uint32(1))
+    assert int(cnt) == 2
+    assert np.asarray(vals)[:2].tolist() == [101, 100]
+
+
+def test_materializer_truncates_chain_beyond_max_len():
+    """A chain longer than max_len yields exactly the NEWEST max_len
+    postings (reverse-chronological), with length clamped to max_len."""
+    z = (1, 4, 7)
+    f = 300
+    layout, state = _ingest_freqs(z, [f])
+    max_len = 64
+    mat = slicepool.make_materializer(layout, max_slices_for(z, [f]),
+                                      max_len=max_len)
+    vals, n = mat(state, jnp.uint32(0))
+    assert int(n) == max_len
+    exp = np.arange(f, dtype=np.uint32)[::-1][:max_len]
+    assert np.array_equal(np.asarray(vals), exp)
+
+
 @pytest.mark.parametrize("start_pool", [0, 1, 2, 3])
 def test_sp_start_pool_honoured(start_pool):
     z = (1, 4, 7, 11)
