@@ -1,17 +1,43 @@
 """Benchmark harness entry point: one module per paper table/figure plus
-the beyond-paper paged-KV transfer and the roofline report.
+the beyond-paper suites (sharded index, paged-KV transfer, roofline).
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAMES] \
+        [--json PATH]
+
+``--json PATH`` writes per-suite wall times and each suite's returned
+metrics to a machine-readable file (CI uploads ``BENCH_ci.json`` as a
+build artifact so the perf trajectory accumulates across commits).  Any
+suite failure exits 1 so CI can gate on benchmarks.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 import traceback
 
 
 SUITES = ("analytical", "fig2", "fig3", "table1", "table2", "ingest",
-          "paged_kv", "roofline")
+          "sharded", "paged_kv", "roofline")
+
+
+def _jsonable(x):
+    """Best-effort conversion of suite return values to JSON types."""
+    import numpy as np
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if isinstance(x, (bool, int, float, str)) or x is None:
+        return x
+    return repr(x)
 
 
 def main(argv=None) -> None:
@@ -20,26 +46,45 @@ def main(argv=None) -> None:
                     help="larger corpus/query scale (slower)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SUITES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-suite wall times + metrics as JSON")
     args = ap.parse_args(argv)
     picked = args.only.split(",") if args.only else SUITES
+    unknown = [n for n in picked if n not in SUITES]
+    if unknown:
+        print(f"unknown suites {unknown}; choose from {SUITES}")
+        sys.exit(2)
     fast = not args.full
 
     t_all = time.perf_counter()
-    failures = []
+    report = {"fast": fast, "suites": {}, "failures": []}
     for name in picked:
-        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
         t0 = time.perf_counter()
         try:
-            mod.run(fast=fast)
-            print(f"[{name}: {time.perf_counter() - t0:.1f}s]")
+            # import inside the try so a broken suite module is recorded
+            # as a failure instead of aborting the whole harness
+            mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+            metrics = mod.run(fast=fast)
+            wall = time.perf_counter() - t0
+            report["suites"][name] = {"wall_s": wall, "ok": True,
+                                      "metrics": _jsonable(metrics)}
+            print(f"[{name}: {wall:.1f}s]")
         except Exception:
-            failures.append(name)
+            wall = time.perf_counter() - t0
+            report["suites"][name] = {"wall_s": wall, "ok": False,
+                                      "metrics": None}
+            report["failures"].append(name)
             print(f"[{name}: FAILED]")
             traceback.print_exc()
-    print(f"\n== benchmarks done in {time.perf_counter() - t_all:.1f}s; "
-          f"{len(failures)} failures {failures or ''} ==")
-    if failures:
-        raise SystemExit(1)
+    report["total_s"] = time.perf_counter() - t_all
+    print(f"\n== benchmarks done in {report['total_s']:.1f}s; "
+          f"{len(report['failures'])} failures {report['failures'] or ''} ==")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    if report["failures"]:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

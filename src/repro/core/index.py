@@ -53,8 +53,8 @@ class ActiveSegment:
         batch = docs.shape[0]
         terms, plist, valid = self._flatten(docs, self.next_docid)
         if term_start_pools is not None:
-            start_pools = term_start_pools[
-                jnp.clip(terms, 0, self.vocab_size - 1).astype(jnp.int32)]
+            start_pools = gather_start_pools(
+                term_start_pools, terms, self.vocab_size)
         self.state = self._ingest(self.state, terms, plist, start_pools, valid)
         self.next_docid += batch
         return batch
@@ -69,6 +69,12 @@ class ActiveSegment:
         if bool(self.state.overflow):
             raise MemoryError(
                 "slice pools exhausted; raise slices_per_pool in the layout")
+
+
+def gather_start_pools(term_start_pools, terms, vocab_size: int):
+    """Per-occurrence starting pools from a per-term SP policy table."""
+    return term_start_pools[
+        jnp.clip(terms, 0, vocab_size - 1).astype(jnp.int32)]
 
 
 def make_flattener():

@@ -77,7 +77,13 @@ def union_asc(a, na, b, nb):
 
 
 class QueryEngine(NamedTuple):
-    """Jitted query functions bound to a (layout, max_slices, max_len)."""
+    """Jitted query functions bound to a (layout, max_slices, max_len).
+
+    The ``*_asc`` members return the INTERNAL ascending INVALID-padded
+    representation (un-jitted, composable under vmap/shard_map — the
+    sharded engine merges shard-local ascending lists before flipping);
+    the plain members are the jitted public descending API.
+    """
     postings_desc: callable     # (state, term) -> (uint32[max_len], n)
     docids_asc: callable        # (state, term) -> (uint32[max_len], n)
     conjunctive: callable       # (state, terms[max_q], n_terms) -> (desc, n)
@@ -85,11 +91,36 @@ class QueryEngine(NamedTuple):
     phrase: callable            # (state, t1, t2) -> (desc ids, n)
     read_all: callable          # (state, terms[max_q], n_terms) -> checksum
     topk_conjunctive: callable  # (state, terms, n_terms, k) -> (desc[k], n)
+    conjunctive_asc: callable   # (state, terms, n_terms) -> (asc, n)
+    disjunctive_asc: callable   # (state, terms, n_terms) -> (asc, n)
+    phrase_asc: callable        # (state, t1, t2) -> (asc ids, n)
 
 
 def make_engine(layout: PoolLayout, max_slices: int, max_len: int,
-                max_query_len: int = 8) -> QueryEngine:
+                max_query_len: int = 8, *, use_kernel: bool = False,
+                interpret: bool = None) -> QueryEngine:
+    """Build a query engine.
+
+    ``use_kernel=True`` routes conjunctive intersections through the
+    Pallas ``postings_intersect`` kernel (tiled two-pointer merge on the
+    VPU) instead of the jnp ``searchsorted`` membership test; both yield
+    bit-identical masks, so results do not depend on the flag.
+    ``interpret`` is forwarded to the kernel (None = auto: interpret
+    everywhere but real TPU backends).
+    """
     materialize = slicepool.make_materializer(layout, max_slices, max_len)
+
+    if use_kernel:
+        from repro.kernels import ops
+        from repro.kernels.postings_intersect import pick_tile
+        tile = pick_tile(max_len)
+
+        def _intersect(a, na, b, nb):
+            mask = ops.intersect_mask(a, b, ta=tile, tb=tile,
+                                      interpret=interpret)
+            return _compact(a, mask.astype(bool))
+    else:
+        _intersect = intersect_asc
 
     @jax.jit
     def postings_desc(state, term):
@@ -106,38 +137,36 @@ def make_engine(layout: PoolLayout, max_slices: int, max_len: int,
     def _gather_terms(state, terms):
         return jax.vmap(lambda t: docids_asc(state, t))(terms)
 
-    @jax.jit
-    def conjunctive(state, terms, n_terms):
+    def _fold_terms(setop, state, terms, n_terms):
         ids, ns = _gather_terms(state, terms)
 
         def body(i, carry):
             acc, na = carry
             use = i < n_terms
-            nxt, nn = intersect_asc(acc, na, ids[i], ns[i])
+            nxt, nn = setop(acc, na, ids[i], ns[i])
             acc = jnp.where(use, nxt, acc)
             na = jnp.where(use, nn, na)
             return acc, na
 
-        acc, na = jax.lax.fori_loop(1, max_query_len, body, (ids[0], ns[0]))
+        return jax.lax.fori_loop(1, max_query_len, body, (ids[0], ns[0]))
+
+    def conjunctive_asc(state, terms, n_terms):
+        return _fold_terms(_intersect, state, terms, n_terms)
+
+    def disjunctive_asc(state, terms, n_terms):
+        return _fold_terms(union_asc, state, terms, n_terms)
+
+    @jax.jit
+    def conjunctive(state, terms, n_terms):
+        acc, na = conjunctive_asc(state, terms, n_terms)
         return asc_to_desc(acc, na), na
 
     @jax.jit
     def disjunctive(state, terms, n_terms):
-        ids, ns = _gather_terms(state, terms)
-
-        def body(i, carry):
-            acc, na = carry
-            use = i < n_terms
-            nxt, nn = union_asc(acc, na, ids[i], ns[i])
-            acc = jnp.where(use, nxt, acc)
-            na = jnp.where(use, nn, na)
-            return acc, na
-
-        acc, na = jax.lax.fori_loop(1, max_query_len, body, (ids[0], ns[0]))
+        acc, na = disjunctive_asc(state, terms, n_terms)
         return asc_to_desc(acc, na), na
 
-    @jax.jit
-    def phrase(state, t1, t2):
+    def phrase_asc(state, t1, t2):
         """Docs where t2 appears at position(t1) + 1 (paper: intersection
         with positional constraints).  Works on raw packed postings: the
         posting uint32 orders by (docid, position)."""
@@ -151,7 +180,11 @@ def make_engine(layout: PoolLayout, max_slices: int, max_len: int,
         hit = member_asc(want, a2)
         ids = jnp.where(hit, post.docid(a1), INVALID)
         ids = jnp.sort(ids)  # ascending, INVALID at end
-        asc, n = dedup_asc(ids)
+        return dedup_asc(ids)
+
+    @jax.jit
+    def phrase(state, t1, t2):
+        asc, n = phrase_asc(state, t1, t2)
         return asc_to_desc(asc, n), n
 
     @jax.jit
@@ -172,4 +205,5 @@ def make_engine(layout: PoolLayout, max_slices: int, max_len: int,
         return desc[:k], jnp.minimum(n, k)
 
     return QueryEngine(postings_desc, docids_asc, conjunctive,
-                       disjunctive, phrase, read_all, topk_conjunctive)
+                       disjunctive, phrase, read_all, topk_conjunctive,
+                       conjunctive_asc, disjunctive_asc, phrase_asc)

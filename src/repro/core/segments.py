@@ -68,21 +68,39 @@ class FrozenSegment:
         return int(self.offsets[-1])
 
 
-def freeze(seg: ActiveSegment, doc_base: int = 0) -> FrozenSegment:
-    heap = np.asarray(seg.state.heap)
-    tail = np.asarray(seg.state.tail)
-    freq = np.asarray(seg.state.freq)
-    V = seg.vocab_size
+def freeze_state(layout: PoolLayout, heap: np.ndarray, tail: np.ndarray,
+                 freq: np.ndarray, *, n_docs: int, doc_base: int = 0,
+                 docid_map=None) -> FrozenSegment:
+    """Freeze raw pool-state arrays into a CSR read-only segment.
+
+    ``docid_map`` (optional) rewrites each posting's docid on the way out
+    — the sharded index stores SHARD-LOCAL docids in its postings and
+    maps them to global ids (``g = local * S + shard``) here, so frozen
+    segments always speak global docids.  Positions are preserved.
+    """
+    V = len(tail)
     offsets = np.zeros(V + 1, np.int64)
     offsets[1:] = np.cumsum(freq)
     data = np.zeros(int(offsets[-1]), np.uint32)
     for t in np.nonzero(freq)[0]:
         buf: List[int] = []
-        _walk_chain_np(seg.layout, heap, int(tail[t]), buf)
+        _walk_chain_np(layout, heap, int(tail[t]), buf)
         # chain walk yields reverse-chronological; store chronological.
         data[offsets[t]: offsets[t + 1]] = np.asarray(buf, np.uint32)[::-1]
+    if docid_map is not None:
+        ids = (data >> np.uint32(post.POS_BITS)).astype(np.uint32)
+        pos = data & np.uint32(post.MAX_POS)
+        data = (docid_map(ids).astype(np.uint32)
+                << np.uint32(post.POS_BITS)) | pos
     return FrozenSegment(offsets=offsets, data=data,
-                         n_docs=seg.next_docid, doc_base=doc_base)
+                         n_docs=n_docs, doc_base=doc_base)
+
+
+def freeze(seg: ActiveSegment, doc_base: int = 0) -> FrozenSegment:
+    return freeze_state(seg.layout, np.asarray(seg.state.heap),
+                        np.asarray(seg.state.tail),
+                        np.asarray(seg.state.freq),
+                        n_docs=seg.next_docid, doc_base=doc_base)
 
 
 # ---------------------------------------------------------------------------

@@ -48,11 +48,39 @@ def init_state(layout: PoolLayout, vocab_size: int) -> PoolState:
     )
 
 
+def init_sharded_state(layout: PoolLayout, vocab_size: int,
+                       n_shards: int) -> PoolState:
+    """``n_shards`` independent pools stacked on a leading shard axis.
+
+    Every leaf of the single-shard :class:`PoolState` gains a leading
+    ``[S, ...]`` dimension (``overflow`` becomes ``bool[S]``); shard s's
+    slice of each leaf is exactly a single-device state, so the scan-based
+    allocator runs unchanged per shard inside ``shard_map`` (logical axis
+    ``"docs"``/``"shard"`` in ``repro.dist.sharding``).
+    """
+    one = init_state(layout, vocab_size)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_shards,) + x.shape), one)
+
+
 def memory_slots_used(layout: PoolLayout, state: PoolState) -> int:
-    """Allocated slots = paper's empirical memory cost ``C_M*``."""
+    """Allocated slots = paper's empirical memory cost ``C_M*``.
+
+    Accepts a single-shard state (``watermark[P]``) or a sharded one
+    (``watermark[S, P]``); sharded states sum over shards.
+    """
     import numpy as np
     wm = np.asarray(state.watermark, np.int64)
     return int(np.sum(wm * np.asarray(layout.slice_sizes, np.int64)))
+
+
+def shard_slots_used(layout: PoolLayout, state: PoolState):
+    """Per-shard allocated slots for a sharded state (int64[S])."""
+    import numpy as np
+    wm = np.asarray(state.watermark, np.int64)
+    assert wm.ndim == 2, "shard_slots_used wants a sharded state [S, P]"
+    return np.sum(wm * np.asarray(layout.slice_sizes, np.int64)[None, :],
+                  axis=1)
 
 
 def _insert_one(layout: PoolLayout, tbl, caps, state: PoolState,

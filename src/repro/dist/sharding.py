@@ -30,6 +30,9 @@ Well-known logical names (the canonical vocabulary; tables may add more):
   expert   MoE expert dim                     -> "model" (expert parallel)
   edges    GNN edge stream                    -> data axes
   rows     recsys embedding-table rows        -> "model" (+ data when huge)
+  docs     document-partitioned index shards  -> data axes (Earlybird-style
+           docid round-robin; see repro.core.sharded_index)
+  shard    alias for ``docs`` (per-shard pytree leaves, e.g. PoolState)
 
 Resolution rules: names absent from the table replicate (None); a mesh
 axis may appear only once per spec, so later duplicates within one spec
@@ -126,6 +129,8 @@ def default_rules(mesh: Mesh, *, fsdp: bool = False,
         "expert": model,
         "edges": dp or None,
         "rows": model,
+        "docs": dp or None,
+        "shard": dp or None,
     })
 
 

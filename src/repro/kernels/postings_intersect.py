@@ -23,6 +23,19 @@ from repro.kernels.compat import pl, pltpu
 INVALID = 0xFFFFFFFF
 
 
+def pick_tile(n: int, preferred: int = 256) -> int:
+    """Largest power-of-two tile <= ``preferred`` dividing ``n``.
+
+    ``intersect_mask`` requires the list length to be a multiple of the
+    tile; query engines size their padded lists to powers of two, so this
+    normally returns ``preferred`` (or ``n`` for short lists).
+    """
+    t = min(preferred, n)
+    while t > 1 and n % t:
+        t //= 2
+    return max(t, 1)
+
+
 def _kernel(a_hbm, b_hbm, o_hbm, a_buf, b_buf, m_buf, sem_a, sem_b, sem_o,
             *, ta: int, tb: int, na_tiles: int, nb_tiles: int):
     def copy_a(ia):

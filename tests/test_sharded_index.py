@@ -1,0 +1,149 @@
+"""Sharded-index unit tests: shard-merge properties, docid translation,
+and the S=1 degenerate case (shard_map shell == plain segment).
+
+The multi-shard bit-identical equivalence proof lives in
+test_spmd_equivalence.py (subprocess with 4 forced host devices); the
+tests here run on ANY device count, so they stay in-process.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytical, query
+from repro.core.index import ActiveSegment
+from repro.core.pointers import PoolLayout
+from repro.core.sharded_index import (ShardedActiveSegment, local_to_global,
+                                      make_doc_mesh, make_sharded_engine,
+                                      merge_desc, topk_merge_desc)
+from repro.data import synth
+
+INVALID = 0xFFFFFFFF
+
+ids = st.lists(st.integers(0, 500), min_size=0, max_size=60)
+
+
+def _shard_desc(xs, S, W):
+    """Partition global ids by residue class (the sharded index's
+    invariant: shard s owns docids with d % S == s) and return the
+    [S, W] descending INVALID-padded lists each shard would emit."""
+    out = np.full((S, W), INVALID, np.uint32)
+    ns = np.zeros(S, np.int32)
+    for s in range(S):
+        mine = sorted({x for x in xs if x % S == s}, reverse=True)
+        out[s, : len(mine)] = mine
+        ns[s] = len(mine)
+    return out, ns
+
+
+@given(ids, st.sampled_from([2, 4]))
+@settings(max_examples=60, deadline=None)
+def test_topk_merge_equals_sorted_union(xs, S):
+    lists, ns = _shard_desc(xs, S, 64)
+    merged, n = topk_merge_desc(jnp.asarray(lists), jnp.asarray(ns))
+    got = np.asarray(merged)
+    exp = sorted(set(xs), reverse=True)
+    assert int(n) == len(exp)
+    assert got[: len(exp)].tolist() == exp
+    assert np.all(got[len(exp):] == INVALID), "padding must stay INVALID"
+    assert len(np.unique(got[: len(exp)])) == len(exp), "no duplicates"
+
+
+@given(ids, st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_topk_merge_truncates_to_newest_k(xs, k):
+    lists, ns = _shard_desc(xs, 4, 64)
+    merged, n = topk_merge_desc(jnp.asarray(lists), jnp.asarray(ns), k=k)
+    exp = sorted(set(xs), reverse=True)[:k]
+    assert int(n) == len(exp)
+    assert np.asarray(merged)[: len(exp)].tolist() == exp
+
+
+@given(ids)
+@settings(max_examples=40, deadline=None)
+def test_merge_desc_is_stable_under_empty_shards(xs):
+    # all values on one shard, three empty shards: merge is the identity
+    # on the valid prefix.
+    lists, ns = _shard_desc([x * 4 for x in xs], 4, 64)
+    assert ns[1:].sum() == 0
+    merged = np.asarray(merge_desc(jnp.asarray(lists).reshape(-1)))
+    exp = sorted({x * 4 for x in xs}, reverse=True)
+    assert merged[: len(exp)].tolist() == exp
+    assert np.all(merged[len(exp):] == INVALID)
+
+
+def test_local_to_global_preserves_order_and_padding():
+    local = jnp.asarray([0, 1, 5, 9, INVALID, INVALID], jnp.uint32)
+    g = np.asarray(local_to_global(local, shard=3, n_shards=4))
+    assert g.tolist() == [3, 7, 23, 39, INVALID, INVALID]
+    assert np.all(np.diff(g[:4].astype(np.int64)) > 0), "ascending kept"
+    # residue-class invariant: every valid global id lands on shard 3
+    assert np.all(g[:4] % 4 == 3)
+
+
+def test_one_shard_matches_unsharded_segment():
+    """S=1 degenerate case: the shard_map shell must be a no-op wrapper
+    around the plain ActiveSegment + engine (runs on any device count)."""
+    Z = (1, 4, 7, 11)
+    layout = PoolLayout(z=Z, slices_per_pool=(2048, 1024, 512, 256))
+    spec = synth.CorpusSpec(vocab=500, n_docs=200, seed=3)
+    docs = synth.zipf_corpus(spec)
+    freqs = synth.term_freqs(docs, spec.vocab)
+    fmax = int(freqs.max())
+    max_slices = int(analytical.slices_needed(Z, fmax)) + 1
+
+    ref = ActiveSegment(layout, spec.vocab)
+    ref.ingest(jnp.asarray(docs))
+    ref.check_health()
+    eng_ref = query.make_engine(layout, max_slices, max_len=512)
+
+    mesh, rules = make_doc_mesh(1)
+    seg = ShardedActiveSegment(layout, spec.vocab, mesh, rules=rules)
+    seg.ingest(jnp.asarray(docs))
+    seg.check_health()
+    eng = make_sharded_engine(layout, mesh, max_slices, max_len=512,
+                              rules=rules)
+
+    assert np.array_equal(seg.term_freqs(), freqs)
+    top = np.argsort(-freqs)
+    terms = jnp.asarray([[int(top[0]), int(top[1])] + [0] * 6], jnp.uint32)
+    n_terms = jnp.asarray([2], jnp.int32)
+    d, n = eng.conjunctive(seg.state, terms, n_terms)
+    d_ref, n_ref = eng_ref.conjunctive(ref.state, terms[0], n_terms[0])
+    assert (np.asarray(d[0])[: int(n[0])].tolist()
+            == np.asarray(d_ref)[: int(n_ref)].tolist())
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >=2 devices (CI forces 4 host devices)")
+def test_multishard_in_process_freqs_and_batch_parity():
+    """On a multi-device run (CI), ingest round-robin across available
+    shards and check global term freqs + a small conjunctive batch
+    against brute force."""
+    S = min(jax.device_count(), 4)
+    Z = (1, 4, 7, 11)
+    layout = PoolLayout(z=Z, slices_per_pool=(2048, 1024, 512, 256))
+    spec = synth.CorpusSpec(vocab=500, n_docs=40 * S, seed=5)
+    docs = synth.zipf_corpus(spec)
+    freqs = synth.term_freqs(docs, spec.vocab)
+    fmax = int(freqs.max())
+
+    mesh, rules = make_doc_mesh(S)
+    seg = ShardedActiveSegment(layout, spec.vocab, mesh, rules=rules)
+    seg.ingest(jnp.asarray(docs))
+    seg.check_health()
+    assert np.array_equal(seg.term_freqs(), freqs)
+
+    eng = make_sharded_engine(
+        layout, mesh, int(analytical.slices_needed(Z, fmax)) + 1,
+        max_len=512, rules=rules)
+    top = np.argsort(-freqs)
+    t1, t2 = int(top[0]), int(top[1])
+    d, n = eng.conjunctive(seg.state,
+                           jnp.asarray([[t1, t2] + [0] * 6], jnp.uint32),
+                           jnp.asarray([2], jnp.int32))
+    exp = sorted(set(np.nonzero((docs == t1).any(axis=1))[0].tolist())
+                 & set(np.nonzero((docs == t2).any(axis=1))[0].tolist()),
+                 reverse=True)
+    assert np.asarray(d[0])[: int(n[0])].astype(np.int64).tolist() == exp

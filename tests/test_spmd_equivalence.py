@@ -83,16 +83,108 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
-def test_sharded_train_step_matches_single_device():
+def _run_subprocess(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+    out = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=900,
                          cwd=os.path.dirname(os.path.dirname(
                              os.path.abspath(__file__))))
     assert out.returncode == 0, out.stderr[-3000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_train_step_matches_single_device():
+    res = _run_subprocess(SCRIPT)
     for arch, r in res.items():
         assert r["loss"] > 0
         assert r["dloss"] < 1e-6, (arch, r)
         assert r["dparam"] < 1e-6, (arch, r)
+
+
+# ---------------------------------------------------------------------------
+# Sharded index engine == single-device engine (bit-identical results)
+# ---------------------------------------------------------------------------
+SCRIPT_INDEX = textwrap.dedent("""
+    from repro.dist import collectives as C
+    C.force_host_device_count(4)
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+
+    from repro.core import analytical, query
+    from repro.core.index import ActiveSegment
+    from repro.core.pointers import PoolLayout
+    from repro.core.sharded_index import (ShardedActiveSegment,
+                                          make_doc_mesh, make_sharded_engine)
+    from repro.data import synth
+
+    Z = (1, 4, 7, 11)
+    layout = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 1024, 512))
+    spec = synth.CorpusSpec(vocab=2000, n_docs=500, seed=0)
+    docs = synth.zipf_corpus(spec)
+    freqs = synth.term_freqs(docs, spec.vocab)
+    fmax = int(freqs.max())
+    max_slices = int(analytical.slices_needed(Z, fmax)) + 1
+
+    # single-device reference engine (jnp searchsorted intersect path)
+    ref = ActiveSegment(layout, spec.vocab)
+    ref.ingest(jnp.asarray(docs)); ref.check_health()
+    eng1 = query.make_engine(layout, max_slices, max_len=1024)
+
+    # 4-shard SPMD engine (Pallas intersect kernel per shard in shard_map)
+    mesh, rules = make_doc_mesh(4)
+    seg = ShardedActiveSegment(layout, spec.vocab, mesh, rules=rules)
+    for i in range(0, 500, 100):            # streaming arrival batches
+        seg.ingest(jnp.asarray(docs[i:i + 100]))
+    seg.check_health()
+    eng4 = make_sharded_engine(layout, mesh, max_slices, max_len=1024,
+                               rules=rules, use_kernel=True)
+    assert np.array_equal(seg.term_freqs(), freqs)
+
+    top = np.argsort(-freqs)
+    rows = [[int(top[a]), int(top[b])] + [0] * 6
+            for a, b in [(0, 1), (2, 5), (1, 20), (10, 50)]]
+    rows.append([int(top[0]), int(top[1]), int(top[2])] + [0] * 5)
+    terms = jnp.asarray(np.asarray(rows, np.uint32))
+    n_terms = jnp.asarray([2, 2, 2, 2, 3], jnp.int32)
+
+    out = {"n_queries": 0}
+    def check(kind, batch_fn, single_fn, *args1):
+        d4, n4 = batch_fn(*args1)
+        for i in range(d4.shape[0]):
+            d1, n1 = single_fn(i)
+            a = np.asarray(d1)[: int(n1)].tolist()
+            b = np.asarray(d4[i])[: int(n4[i])].tolist()
+            assert a == b, (kind, i, a[:8], b[:8])
+            assert len(set(b)) == len(b), (kind, i, "duplicates")
+            out["n_queries"] += 1
+
+    check("conj", eng4.conjunctive,
+          lambda i: eng1.conjunctive(ref.state, terms[i], n_terms[i]),
+          seg.state, terms, n_terms)
+    check("disj", eng4.disjunctive,
+          lambda i: eng1.disjunctive(ref.state, terms[i], n_terms[i]),
+          seg.state, terms, n_terms)
+    t1 = jnp.asarray([int(top[0]), int(top[2]), int(top[1])], jnp.uint32)
+    t2 = jnp.asarray([int(top[1]), int(top[3]), int(top[0])], jnp.uint32)
+    check("phrase", eng4.phrase,
+          lambda i: eng1.phrase(ref.state, t1[i], t2[i]),
+          seg.state, t1, t2)
+
+    # top-k path: newest k across shards
+    dk, nk = eng4.topk_conjunctive(seg.state, terms, n_terms, 5)
+    d1, n1 = eng1.topk_conjunctive(ref.state, terms[0], n_terms[0], 5)
+    assert (np.asarray(dk[0])[: int(nk[0])].tolist()
+            == np.asarray(d1)[: int(n1)].tolist())
+    print(json.dumps(out))
+""")
+
+
+def test_sharded_index_engine_matches_single_device():
+    """Conjunctive, disjunctive and phrase results from the 4-shard
+    engine (Pallas intersect per shard + all_gather + top-k merge) must
+    be bit-identical, docid-descending and duplicate-free vs the
+    single-device engine."""
+    res = _run_subprocess(SCRIPT_INDEX)
+    assert res["n_queries"] == 13
