@@ -19,7 +19,7 @@ import traceback
 
 
 SUITES = ("analytical", "fig2", "fig3", "table1", "table2", "ingest",
-          "sharded", "paged_kv", "roofline")
+          "sharded", "lifecycle", "paged_kv", "roofline")
 
 
 def _jsonable(x):

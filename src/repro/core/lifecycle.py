@@ -1,0 +1,350 @@
+"""Streaming lifecycle engine (paper §3.1's full loop, closed).
+
+A live tweet stream never stops: the active segment fills, rolls over
+into a frozen read-only CSR segment, its slices return to the pool free
+lists (:func:`repro.core.slicepool.release_slices`), and the next active
+segment recycles them — so the heap high-water mark is bounded by ONE
+segment's demand while queries still see every frozen segment.  This
+module drives that loop continuously and gives it a UNIFIED query path:
+
+  * **Active pool** — the jitted slice-pool engines
+    (:mod:`repro.core.query` single-device,
+    :mod:`repro.core.sharded_index` document-sharded).
+  * **Frozen segments** — each frozen segment is wrapped in a
+    :class:`PackedSegment`: per-term GLOBAL docid lists gap-compressed
+    into 128-docid byte-width blocks
+    (:mod:`repro.kernels.segment_intersect`).  Conjunctions run the
+    fused decode+intersect Pallas kernel per segment — the compressed
+    blocks are decoded on the VPU, never walked host-side.
+  * **Merge** — every segment owns a disjoint ascending docid range, so
+    per-segment descending lists concatenated newest-segment-first ARE
+    the global reverse-chronological result: bit-identical to a
+    never-frozen index fed the same stream
+    (tests/test_spmd_equivalence.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import postings as post
+from repro.core import query as q
+from repro.core import segments as seg_mod
+from repro.core import sharded_index as shx
+from repro.core import slicepool
+from repro.core.pointers import PoolLayout
+from repro.kernels.segment_intersect import (PackedList, decode_packed,
+                                             pack_docids)
+
+
+# ---------------------------------------------------------------------------
+# Frozen segments, device-queryable
+# ---------------------------------------------------------------------------
+class PackedSegment:
+    """Query-side view of one frozen segment (single-device or sharded).
+
+    Wraps a :class:`~repro.core.segments.FrozenSegment` or
+    :class:`~repro.core.sharded_index.ShardedFrozenSegment` and exposes,
+    per term, the GLOBAL ascending docid list as a block-gap-compressed
+    :class:`PackedList` ready for the ``segment_intersect`` kernel.
+    Packing is LAZY: the first query touching a (segment, term) pair
+    pays a one-time host-side pack, cached for the segment's lifetime.
+    Call :meth:`warm` at rollover (e.g. with the query log's hot terms)
+    to move that cost off the query path entirely — eagerly packing the
+    whole vocabulary would stall ingest instead.
+    """
+
+    def __init__(self, seg):
+        self.seg = seg
+        self.doc_base = int(seg.doc_base)
+        self._packed: Dict[int, PackedList] = {}
+        self._post: Dict[int, np.ndarray] = {}
+
+    def docids_asc(self, term: int) -> np.ndarray:
+        """Ascending GLOBAL docids of ``term`` in this segment."""
+        rel = self.seg.docids_desc(int(term))[::-1]
+        return rel.astype(np.int64) + self.doc_base
+
+    def packed(self, term: int) -> PackedList:
+        term = int(term)
+        got = self._packed.get(term)
+        if got is None:
+            ids = self.docids_asc(term)
+            # global docids are uint32 repo-wide (0xFFFFFFFF is the
+            # INVALID sentinel); fail loudly instead of wrapping once
+            # doc_base outgrows that — resharding territory, not a
+            # silent-corruption one.
+            if ids.size and ids[-1] >= 0xFFFFFFFF:
+                raise OverflowError(
+                    f"global docid {int(ids[-1])} exceeds the uint32 "
+                    f"docid space; reshard or reset doc_base")
+            got = pack_docids(ids.astype(np.uint32))
+            self._packed[term] = got
+        return got
+
+    def postings_asc(self, term: int) -> np.ndarray:
+        """Ascending packed (segment-relative docid, position) postings —
+        the positional substrate for phrase queries."""
+        term = int(term)
+        got = self._post.get(term)
+        if got is None:
+            if isinstance(self.seg, seg_mod.FrozenSegment):
+                got = self.seg.postings(term)   # already (docid, pos) asc
+            else:  # sharded: shards are disjoint residue classes
+                got = np.sort(np.concatenate(
+                    [sh.postings(term) for sh in self.seg.shards]))
+            self._post[term] = got
+        return got
+
+    def warm(self, terms: Sequence[int]) -> None:
+        for t in terms:
+            self.packed(t)
+
+
+def conjunctive_packed(pseg: PackedSegment, terms: Sequence[int], *,
+                       use_kernel: bool = True,
+                       interpret: Optional[bool] = None) -> np.ndarray:
+    """Descending GLOBAL docids holding every term, within one frozen
+    segment.  The driving intersection runs the fused decode+intersect
+    kernel on the two smallest compressed lists; further terms fold in
+    with the vectorised membership test on the already-compacted list."""
+    packs = sorted((pseg.packed(t) for t in terms), key=lambda p: p.n)
+    if not packs or packs[0].n == 0:
+        return np.zeros(0, np.int64)
+    a = packs[0]
+    cur = decode_packed(a)                    # ascending, INVALID-padded
+    n = jnp.int32(a.n)
+    for i, b in enumerate(packs[1:]):
+        if b.n == 0:
+            return np.zeros(0, np.int64)
+        if i == 0 and use_kernel:
+            from repro.kernels import ops
+            mask = ops.segment_intersect_mask(a, b, interpret=interpret)
+            cur, n = q._compact(cur, mask.astype(bool))
+        else:
+            hit = q.member_asc(cur, decode_packed(b))
+            cur, n = q._compact(cur, hit)
+    return np.asarray(cur)[: int(n)][::-1].astype(np.int64)
+
+
+def disjunctive_packed(pseg: PackedSegment,
+                       terms: Sequence[int]) -> np.ndarray:
+    """Descending GLOBAL docids holding any term, one frozen segment."""
+    lists = [pseg.docids_asc(t) for t in terms]
+    out = lists[0]
+    for more in lists[1:]:
+        out = np.union1d(out, more)
+    return out[::-1]
+
+
+def phrase_packed(pseg: PackedSegment, t1: int, t2: int) -> np.ndarray:
+    """Descending GLOBAL docids where ``t2`` occurs at position(t1)+1,
+    within one frozen segment (packed postings order by (docid, pos), so
+    the +1 membership trick from the live engine carries over)."""
+    p1 = pseg.postings_asc(t1)
+    p2 = pseg.postings_asc(t2)
+    if p1.size == 0 or p2.size == 0:
+        return np.zeros(0, np.int64)
+    want = p1 + np.uint32(1)
+    pos = np.minimum(np.searchsorted(p2, want), p2.size - 1)
+    hit = p2[pos] == want
+    ids = np.unique(p1[hit] >> np.uint32(post.POS_BITS)).astype(np.int64)
+    return ids[::-1] + pseg.doc_base
+
+
+# ---------------------------------------------------------------------------
+# Unified engines: active pool + every frozen segment
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LifecycleStats:
+    docs_ingested: int = 0
+    rollovers: int = 0
+    high_water_slots: int = 0
+    live_slots: int = 0
+
+
+class _LifecycleBase:
+    """Shared shell: frozen-segment tracking, stats, unified queries.
+
+    Subclasses provide ``self.segments`` (a SegmentSet-like with
+    ``ingest``/``frozen``/``active``/``_doc_base``) and
+    :meth:`_active_desc` (GLOBAL descending docids from the active
+    segment for one query).
+    """
+
+    layout: PoolLayout
+    max_query_len: int
+    use_kernel: bool
+    interpret: Optional[bool]
+
+    def _init_shell(self) -> None:
+        self._packed: List[PackedSegment] = []
+        self.stats = LifecycleStats()
+
+    # -- ingest ----------------------------------------------------------
+    def ingest(self, docs) -> None:
+        """Index one arrival batch; segments roll over (freeze + reclaim
+        + re-pack) automatically when they fill."""
+        self.segments.ingest(jnp.asarray(docs))
+        prev = self.stats.rollovers
+        self._sync_frozen()
+        self.stats.docs_ingested += int(np.asarray(docs).shape[0])
+        # refresh memory stats only when a rollover happened: reading
+        # the watermark is a host sync that would otherwise stall the
+        # async scan dispatch on every batch of the ingest hot path.
+        if self.stats.rollovers != prev:
+            st = self.segments.active.state
+            self.stats.high_water_slots = slicepool.memory_high_water_slots(
+                self.layout, st)
+            self.stats.live_slots = slicepool.memory_slots_used(
+                self.layout, st)
+
+    def _sync_frozen(self) -> None:
+        by_id = {id(p.seg): p for p in self._packed}
+        fresh = []
+        for fz in self.segments.frozen:
+            p = by_id.get(id(fz))
+            if p is None:
+                p = PackedSegment(fz)
+                self.stats.rollovers += 1
+            fresh.append(p)
+        self._packed = fresh
+
+    def check_health(self) -> None:
+        self.segments.active.check_health()
+
+    @property
+    def doc_base(self) -> int:
+        return self.segments._doc_base
+
+    @property
+    def frozen_packed(self) -> List[PackedSegment]:
+        return list(self._packed)
+
+    def memory_slots_used(self) -> int:
+        return slicepool.memory_slots_used(self.layout,
+                                           self.segments.active.state)
+
+    def memory_high_water_slots(self) -> int:
+        return slicepool.memory_high_water_slots(
+            self.layout, self.segments.active.state)
+
+    # -- queries ---------------------------------------------------------
+    def _unified(self, kind: str, terms: Sequence[int],
+                 limit: Optional[int]) -> np.ndarray:
+        parts = [self._active_desc(kind, terms)]
+        total = len(parts[0])
+        for pseg in reversed(self._packed):   # newest frozen first
+            # segments own disjoint descending docid ranges, so once the
+            # newer segments fill the limit, older ones can't contribute
+            # — the paper's early-exit, at segment granularity.
+            if limit is not None and total >= limit:
+                break
+            if kind == "conjunctive":
+                parts.append(conjunctive_packed(
+                    pseg, terms, use_kernel=self.use_kernel,
+                    interpret=self.interpret))
+            elif kind == "disjunctive":
+                parts.append(disjunctive_packed(pseg, terms))
+            else:
+                parts.append(phrase_packed(pseg, terms[0], terms[1]))
+            total += len(parts[-1])
+        out = np.concatenate(parts)
+        return out[:limit] if limit is not None else out
+
+    def conjunctive(self, terms: Sequence[int],
+                    limit: Optional[int] = None) -> np.ndarray:
+        """GLOBAL docids holding every term, newest first, across the
+        active pool and all frozen segments."""
+        return self._unified("conjunctive", terms, limit)
+
+    def disjunctive(self, terms: Sequence[int],
+                    limit: Optional[int] = None) -> np.ndarray:
+        return self._unified("disjunctive", terms, limit)
+
+    def phrase(self, t1: int, t2: int,
+               limit: Optional[int] = None) -> np.ndarray:
+        return self._unified("phrase", (t1, t2), limit)
+
+
+class LifecycleEngine(_LifecycleBase):
+    """Single-device streaming engine: ingest -> rollover -> reclaim,
+    with queries spanning the active pool and all frozen segments."""
+
+    def __init__(self, layout: PoolLayout, vocab_size: int,
+                 docs_per_segment: int, *, max_slices: int, max_len: int,
+                 max_query_len: int = 8, max_segments: int = 12,
+                 use_kernel: bool = True,
+                 interpret: Optional[bool] = None):
+        self.layout = layout
+        self.vocab_size = vocab_size
+        self.max_query_len = max_query_len
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.segments = seg_mod.SegmentSet(
+            layout, vocab_size, docs_per_segment, max_segments=max_segments)
+        self.engine = q.make_engine(layout, max_slices, max_len,
+                                    max_query_len, use_kernel=use_kernel,
+                                    interpret=interpret)
+        self._init_shell()
+
+    def _active_desc(self, kind: str, terms: Sequence[int]) -> np.ndarray:
+        state = self.segments.active.state
+        if kind == "phrase":
+            desc, n = self.engine.phrase(state, jnp.uint32(terms[0]),
+                                         jnp.uint32(terms[1]))
+        else:
+            padded = np.zeros(self.max_query_len, np.uint32)
+            padded[: len(terms)] = terms
+            desc, n = getattr(self.engine, kind)(
+                state, jnp.asarray(padded), jnp.int32(len(terms)))
+        return (np.asarray(desc)[: int(n)].astype(np.int64)
+                + self.doc_base)
+
+
+class ShardedLifecycleEngine(_LifecycleBase):
+    """Document-sharded streaming engine: the same unified query path on
+    top of :class:`~repro.core.sharded_index.ShardedSegmentSet` (per-
+    shard reclamation, shard_map active queries, global-docid frozen
+    segments)."""
+
+    def __init__(self, layout: PoolLayout, vocab_size: int,
+                 docs_per_segment: int, mesh, *, max_slices: int,
+                 max_len: int, max_query_len: int = 8,
+                 max_segments: int = 12, rules=None,
+                 use_kernel: bool = True,
+                 interpret: Optional[bool] = None):
+        self.layout = layout
+        self.vocab_size = vocab_size
+        self.max_query_len = max_query_len
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.segments = shx.ShardedSegmentSet(
+            layout, vocab_size, docs_per_segment, mesh, rules=rules,
+            max_segments=max_segments)
+        self.engine = shx.make_sharded_engine(
+            layout, mesh, max_slices, max_len, max_query_len,
+            rules=self.segments.rules, use_kernel=use_kernel,
+            interpret=interpret)
+        self._init_shell()
+
+    def _active_desc(self, kind: str, terms: Sequence[int]) -> np.ndarray:
+        state = self.segments.active.state
+        if kind == "phrase":
+            desc, n = self.engine.phrase(
+                state, jnp.asarray([terms[0]], jnp.uint32),
+                jnp.asarray([terms[1]], jnp.uint32))
+        else:
+            padded = np.zeros((1, self.max_query_len), np.uint32)
+            padded[0, : len(terms)] = terms
+            desc, n = getattr(self.engine, kind)(
+                state, jnp.asarray(padded),
+                jnp.asarray([len(terms)], jnp.int32))
+        return (np.asarray(desc[0])[: int(n[0])].astype(np.int64)
+                + self.doc_base)
+
+
+Engine = Union[LifecycleEngine, ShardedLifecycleEngine]

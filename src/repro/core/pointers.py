@@ -83,6 +83,22 @@ class PoolLayout:
     def total_slots(self) -> int:
         return sum(self.pool_slots)
 
+    @property
+    def total_slices(self) -> int:
+        """Capacity of the flat per-pool free-list array (one int32 per
+        allocatable slice; see slicepool.PoolState.free_list)."""
+        return sum(self.slices_per_pool)
+
+    @property
+    def free_base(self) -> Tuple[int, ...]:
+        """Start offset of each pool's region inside the free-list array
+        (mirrors :attr:`pool_base`, but in slices instead of slots)."""
+        bases, acc = [], 0
+        for n in self.slices_per_pool:
+            bases.append(acc)
+            acc += n
+        return tuple(bases)
+
     def __post_init__(self):
         if not self.z:
             raise ValueError("Z must be non-empty")
@@ -116,6 +132,7 @@ class PoolLayout:
                 [(1 << b) - 1 for b in self.slice_bits], jnp.uint32
             ),
             base=jnp.asarray(self.pool_base, jnp.uint32),
+            free_base=jnp.asarray(self.free_base, jnp.int32),
         )
 
 

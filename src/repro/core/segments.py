@@ -23,6 +23,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.core import postings as post
+from repro.core import slicepool
 from repro.core.index import ActiveSegment
 from repro.core.pointers import NULL, PoolLayout, decode_host
 
@@ -31,7 +32,8 @@ from repro.core.pointers import NULL, PoolLayout, decode_host
 # Chain walk in numpy (offline freeze path)
 # ---------------------------------------------------------------------------
 def _walk_chain_np(layout: PoolLayout, heap: np.ndarray, tail: int,
-                   out: List[int]) -> None:
+                   out: List[int],
+                   slices_out: Optional[List[List[int]]] = None) -> None:
     base_tbl = layout.pool_base
     sizes = layout.slice_sizes
     ptr = tail
@@ -40,6 +42,8 @@ def _walk_chain_np(layout: PoolLayout, heap: np.ndarray, tail: int,
         base = base_tbl[pool] + sl * sizes[pool]
         start = 1 if pool > 0 else 0
         out.extend(heap[base + start: base + off + 1][::-1].tolist())
+        if slices_out is not None:
+            slices_out[pool].append(sl)
         ptr = int(heap[base]) if pool > 0 else int(NULL)
 
 
@@ -50,6 +54,9 @@ class FrozenSegment:
     data: np.ndarray          # uint32[total]
     n_docs: int
     doc_base: int = 0
+    # per-pool arrays of slice indices the freeze walked — everything the
+    # active segment had allocated, ready for slicepool.release_slices.
+    freed_slices: Optional[List[np.ndarray]] = None
 
     def postings(self, term: int) -> np.ndarray:
         return self.data[self.offsets[term]: self.offsets[term + 1]]
@@ -77,14 +84,21 @@ def freeze_state(layout: PoolLayout, heap: np.ndarray, tail: np.ndarray,
     — the sharded index stores SHARD-LOCAL docids in its postings and
     maps them to global ids (``g = local * S + shard``) here, so frozen
     segments always speak global docids.  Positions are preserved.
+
+    The returned segment's ``freed_slices`` lists every (pool, slice) the
+    walk visited — i.e. the active segment's whole allocation — so the
+    caller can hand the slices back to the allocator
+    (:func:`repro.core.slicepool.release_slices`) and the next segment
+    recycles them instead of bumping the watermark.
     """
     V = len(tail)
     offsets = np.zeros(V + 1, np.int64)
     offsets[1:] = np.cumsum(freq)
     data = np.zeros(int(offsets[-1]), np.uint32)
+    slices: List[List[int]] = [[] for _ in range(layout.num_pools)]
     for t in np.nonzero(freq)[0]:
         buf: List[int] = []
-        _walk_chain_np(layout, heap, int(tail[t]), buf)
+        _walk_chain_np(layout, heap, int(tail[t]), buf, slices)
         # chain walk yields reverse-chronological; store chronological.
         data[offsets[t]: offsets[t + 1]] = np.asarray(buf, np.uint32)[::-1]
     if docid_map is not None:
@@ -92,8 +106,10 @@ def freeze_state(layout: PoolLayout, heap: np.ndarray, tail: np.ndarray,
         pos = data & np.uint32(post.MAX_POS)
         data = (docid_map(ids).astype(np.uint32)
                 << np.uint32(post.POS_BITS)) | pos
+    freed = [np.asarray(s, np.int32) for s in slices]
     return FrozenSegment(offsets=offsets, data=data,
-                         n_docs=n_docs, doc_base=doc_base)
+                         n_docs=n_docs, doc_base=doc_base,
+                         freed_slices=freed)
 
 
 def freeze(seg: ActiveSegment, doc_base: int = 0) -> FrozenSegment:
@@ -206,9 +222,12 @@ class SegmentSet:
         self.docs_per_segment = docs_per_segment
         self.max_segments = max_segments
         self.frozen: List[FrozenSegment] = []
-        self.active = ActiveSegment(layout, vocab_size,
-                                    max_docs=docs_per_segment)
+        self.active = self._new_active()
         self._doc_base = 0
+
+    def _new_active(self, state=None) -> ActiveSegment:
+        return ActiveSegment(self.layout, self.vocab_size,
+                             max_docs=self.docs_per_segment, state=state)
 
     def ingest(self, docs, **kw) -> None:
         self.active.ingest(docs, **kw)
@@ -216,13 +235,18 @@ class SegmentSet:
             self.rollover()
 
     def rollover(self) -> FrozenSegment:
+        """Freeze the active segment and RECYCLE its slices: the frozen
+        postings live on as read-only CSR, while every slice the segment
+        occupied goes back on the pool free lists for the next active
+        segment (the Goldilocks loop — watermark bounded under churn)."""
         fz = freeze(self.active, doc_base=self._doc_base)
         self.frozen.append(fz)
         if len(self.frozen) > self.max_segments - 1:
             self.frozen.pop(0)  # oldest segment retired (paper: bounded set)
         self._doc_base += self.active.next_docid
-        self.active = ActiveSegment(self.layout, self.vocab_size,
-                                    max_docs=self.docs_per_segment)
+        released = slicepool.release_slices(
+            self.layout, self.active.state, fz.freed_slices)
+        self.active = self._new_active(state=released)
         return fz
 
     def history_freqs(self) -> np.ndarray:

@@ -95,7 +95,8 @@ def _shard_index(mesh: Mesh, axes):
 def _state_specs(d) -> slicepool.PoolState:
     return slicepool.PoolState(
         heap=P(d, None), watermark=P(d, None),
-        tail=P(d, None), freq=P(d, None), overflow=P(d))
+        tail=P(d, None), freq=P(d, None), overflow=P(d),
+        free_list=P(d, None), free_count=P(d, None))
 
 
 def _squeeze0(tree):
@@ -384,10 +385,10 @@ class ShardedSegmentSet:
             raise ValueError("docs_per_segment must be a multiple of the "
                              "shard count")
 
-    def _new_active(self) -> ShardedActiveSegment:
+    def _new_active(self, state=None) -> ShardedActiveSegment:
         return ShardedActiveSegment(
             self.layout, self.vocab_size, self.mesh, rules=self.rules,
-            max_docs=self.docs_per_segment)
+            max_docs=self.docs_per_segment, state=state)
 
     @property
     def num_shards(self) -> int:
@@ -400,7 +401,10 @@ class ShardedSegmentSet:
 
     def rollover(self) -> ShardedFrozenSegment:
         """Freeze every shard of the active segment into its own
-        read-only CSR segment with GLOBAL docids, then start fresh."""
+        read-only CSR segment with GLOBAL docids, then recycle: each
+        shard's slices go back on that shard's free lists
+        (``slicepool.release_slices`` on the stacked state), so the next
+        active segment reuses them instead of bumping the watermark."""
         seg = self.active
         S = seg.num_shards
         heap = np.asarray(seg.state.heap)
@@ -420,7 +424,9 @@ class ShardedSegmentSet:
         if len(self.frozen) > self.max_segments - 1:
             self.frozen.pop(0)  # oldest segment retired (bounded set)
         self._doc_base += seg.next_docid
-        self.active = self._new_active()
+        released = slicepool.release_slices(
+            self.layout, seg.state, [sh.freed_slices for sh in shards])
+        self.active = self._new_active(state=released)
         return fz
 
     def history_freqs(self) -> np.ndarray:

@@ -14,10 +14,20 @@ loop runs as a single ``jax.lax.scan`` on device:
   * ``freq``      — per-term posting count.
   * ``overflow``  — sticky bit; inserts become no-ops when a pool is
                     exhausted (tests assert it stays False).
+  * ``free_list`` / ``free_count`` — per-pool LIFO stacks of reclaimed
+                    slice indices (pool p owns region
+                    ``[free_base_p, free_base_p + slices_p)``).  Segment
+                    rollover returns every slice of the frozen segment
+                    here (:func:`release_slices`); allocation pops a
+                    recycled slice before bumping the watermark, so the
+                    heap high-water mark is bounded under steady churn —
+                    the Goldilocks loop of the paper's §3.1 lifecycle.
 
-Zero-copy invariant (paper §3.2): a posting, once written, is never moved.
-The only mutations are bump-pointer watermark increments and single-slot
-writes, which XLA performs in place inside the scan.
+Zero-copy invariant (paper §3.2): a posting, once written, is never moved
+WITHIN a segment's lifetime.  The only mutations are bump-pointer/free-list
+allocation and single-slot writes, which XLA performs in place inside the
+scan; reclaimed slices are only rewritten after their postings were frozen
+into a read-only CSR segment.
 """
 from __future__ import annotations
 
@@ -31,11 +41,13 @@ from repro.core.pointers import NULL, PoolLayout
 
 
 class PoolState(NamedTuple):
-    heap: jax.Array       # uint32[total_slots]
-    watermark: jax.Array  # int32[P] next free slice per pool
-    tail: jax.Array       # uint32[V]
-    freq: jax.Array       # int32[V]
-    overflow: jax.Array   # bool[]
+    heap: jax.Array        # uint32[total_slots]
+    watermark: jax.Array   # int32[P] next never-used slice per pool
+    tail: jax.Array        # uint32[V]
+    freq: jax.Array        # int32[V]
+    overflow: jax.Array    # bool[]
+    free_list: jax.Array   # int32[total_slices] reclaimed slices per pool
+    free_count: jax.Array  # int32[P] live entries in each pool's region
 
 
 def init_state(layout: PoolLayout, vocab_size: int) -> PoolState:
@@ -45,6 +57,8 @@ def init_state(layout: PoolLayout, vocab_size: int) -> PoolState:
         tail=jnp.full((vocab_size,), NULL, jnp.uint32),
         freq=jnp.zeros((vocab_size,), jnp.int32),
         overflow=jnp.asarray(False),
+        free_list=jnp.zeros((layout.total_slices,), jnp.int32),
+        free_count=jnp.zeros((layout.num_pools,), jnp.int32),
     )
 
 
@@ -64,10 +78,26 @@ def init_sharded_state(layout: PoolLayout, vocab_size: int,
 
 
 def memory_slots_used(layout: PoolLayout, state: PoolState) -> int:
-    """Allocated slots = paper's empirical memory cost ``C_M*``.
+    """LIVE allocated slots = paper's empirical memory cost ``C_M*``.
 
-    Accepts a single-shard state (``watermark[P]``) or a sharded one
+    Slices sitting on the free list are not live — reclaiming a segment
+    (freeze + :func:`release_slices`) makes this DROP, while
+    :func:`memory_high_water_slots` keeps the historical peak.  Accepts a
+    single-shard state (``watermark[P]``) or a sharded one
     (``watermark[S, P]``); sharded states sum over shards.
+    """
+    import numpy as np
+    live = (np.asarray(state.watermark, np.int64)
+            - np.asarray(state.free_count, np.int64))
+    return int(np.sum(live * np.asarray(layout.slice_sizes, np.int64)))
+
+
+def memory_high_water_slots(layout: PoolLayout, state: PoolState) -> int:
+    """Heap high-water mark: every slot that was EVER allocated.
+
+    The watermark only moves when the free list is empty, so under steady
+    churn with reclamation this is bounded by one segment's demand — the
+    lifecycle benchmark asserts exactly that.
     """
     import numpy as np
     wm = np.asarray(state.watermark, np.int64)
@@ -75,11 +105,12 @@ def memory_slots_used(layout: PoolLayout, state: PoolState) -> int:
 
 
 def shard_slots_used(layout: PoolLayout, state: PoolState):
-    """Per-shard allocated slots for a sharded state (int64[S])."""
+    """Per-shard LIVE allocated slots for a sharded state (int64[S])."""
     import numpy as np
     wm = np.asarray(state.watermark, np.int64)
     assert wm.ndim == 2, "shard_slots_used wants a sharded state [S, P]"
-    return np.sum(wm * np.asarray(layout.slice_sizes, np.int64)[None, :],
+    live = wm - np.asarray(state.free_count, np.int64)
+    return np.sum(live * np.asarray(layout.slice_sizes, np.int64)[None, :],
                   axis=1)
 
 
@@ -101,14 +132,23 @@ def _insert_one(layout: PoolLayout, tbl, caps, state: PoolState,
     alloc_pool = jnp.where(
         new, start_pool.astype(jnp.uint32),
         jnp.minimum(pool + jnp.uint32(1), jnp.uint32(P - 1)))
-    slice_new = state.watermark[alloc_pool].astype(jnp.uint32)
-    can_alloc = slice_new < caps[alloc_pool]
+    # reclaimed slices first (LIFO pop), then bump the watermark.
+    fc = state.free_count[alloc_pool]
+    has_free = fc > 0
+    free_slot = tbl["free_base"][alloc_pool] + jnp.maximum(fc - 1, 0)
+    recycled = state.free_list[free_slot].astype(jnp.uint32)
+    fresh = state.watermark[alloc_pool].astype(jnp.uint32)
+    slice_new = jnp.where(has_free, recycled, fresh)
+    can_alloc = has_free | (fresh < caps[alloc_pool])
     ok = valid & (~need_alloc | can_alloc)
     do_alloc = need_alloc & ok
 
     watermark = state.watermark.at[
-        jnp.where(do_alloc, alloc_pool.astype(jnp.int32), P)
+        jnp.where(do_alloc & ~has_free, alloc_pool.astype(jnp.int32), P)
     ].add(1, mode="drop")
+    free_count = state.free_count.at[
+        jnp.where(do_alloc & has_free, alloc_pool.astype(jnp.int32), P)
+    ].add(-1, mode="drop")
 
     has_ptr_slot = alloc_pool > jnp.uint32(0)
     w_pool = jnp.where(do_alloc, alloc_pool, pool)
@@ -134,7 +174,8 @@ def _insert_one(layout: PoolLayout, tbl, caps, state: PoolState,
     tail = state.tail.at[term].set(jnp.where(ok, new_tail, t))
     freq = state.freq.at[term].add(ok.astype(jnp.int32))
     overflow = state.overflow | (valid & need_alloc & ~can_alloc)
-    return PoolState(heap, watermark, tail, freq, overflow)
+    return PoolState(heap, watermark, tail, freq, overflow,
+                     state.free_list, free_count)
 
 
 def make_ingest_fn(layout: PoolLayout, vocab_size: int):
@@ -170,6 +211,74 @@ def make_ingest_fn(layout: PoolLayout, vocab_size: int):
         return state
 
     return ingest
+
+
+# ---------------------------------------------------------------------------
+# Slice reclamation (segment rollover -> free list).
+# ---------------------------------------------------------------------------
+def release_slices(layout: PoolLayout, state: PoolState, freed,
+                   *, reset_terms: bool = True) -> PoolState:
+    """Return reclaimed slices to the per-pool free lists (host-side).
+
+    ``freed`` is a per-pool sequence of slice-index arrays — exactly what
+    :func:`repro.core.segments.freeze_state` reports as
+    ``FrozenSegment.freed_slices``; for a sharded state (leaves
+    ``[S, ...]``) pass one such sequence per shard.  ``reset_terms``
+    clears ``tail``/``freq`` so the pool is an empty active segment again
+    (heap bytes are left in place: they were already frozen into the
+    read-only CSR segment, and recycled slices overwrite them lazily).
+
+    Rollover is off the ingest hot path (exactly like the freeze walk),
+    so this runs in numpy and re-uploads the small non-heap leaves.
+    """
+    import numpy as np
+    wm = np.asarray(state.watermark)
+    sharded = wm.ndim == 2
+    fl = np.asarray(state.free_list).copy()
+    fc = np.asarray(state.free_count).copy()
+    base = np.asarray(layout.free_base, np.int64)
+    caps = np.asarray(layout.slices_per_pool, np.int64)
+
+    def _push(fl_row, fc_row, wm_row, per_pool):
+        for p, sl in enumerate(per_pool):
+            sl = np.asarray(sl, np.int32)
+            if sl.size == 0:
+                continue
+            if np.unique(sl).size != sl.size:
+                raise ValueError(
+                    f"pool {p}: slice released twice in one call — "
+                    f"double release?")
+            held = fl_row[base[p]: base[p] + fc_row[p]]
+            if np.intersect1d(sl, held).size:
+                raise ValueError(
+                    f"pool {p}: slice already on the free list — "
+                    f"double release?")
+            if sl.size and (int(sl.max()) >= int(wm_row[p])
+                            or int(sl.min()) < 0):
+                raise ValueError(
+                    f"pool {p}: slice index outside the allocated range "
+                    f"[0, {wm_row[p]}) — not this pool's slice")
+            n = int(fc_row[p]) + sl.size
+            if n > caps[p]:
+                raise ValueError(
+                    f"pool {p}: releasing {sl.size} slices overflows the "
+                    f"free list ({fc_row[p]} held, capacity {caps[p]})")
+            fl_row[base[p] + fc_row[p]: base[p] + n] = sl
+            fc_row[p] = n
+
+    if sharded:
+        for s, per_pool in enumerate(freed):
+            _push(fl[s], fc[s], wm[s], per_pool)
+    else:
+        _push(fl, fc, wm, freed)
+
+    tail, freq = state.tail, state.freq
+    if reset_terms:
+        tail = jnp.full_like(state.tail, NULL)
+        freq = jnp.zeros_like(state.freq)
+    return state._replace(free_list=jnp.asarray(fl),
+                          free_count=jnp.asarray(fc),
+                          tail=tail, freq=freq)
 
 
 # ---------------------------------------------------------------------------

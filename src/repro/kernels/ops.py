@@ -15,6 +15,8 @@ from repro.kernels.embedding_bag import embedding_bag as _embedding_bag
 from repro.kernels.paged_attention import PAGE
 from repro.kernels.paged_attention import paged_attention as _paged_attention
 from repro.kernels.postings_intersect import intersect_mask as _intersect_mask
+from repro.kernels.segment_intersect import (
+    segment_intersect_mask as _segment_intersect_mask)
 
 
 def _default_interpret() -> bool:
@@ -43,5 +45,12 @@ def intersect_mask(a, b, *, ta: int = 256, tb: int = 256, interpret=None):
     return _intersect_mask(a, b, ta=ta, tb=tb, interpret=interpret)
 
 
-__all__ = ["paged_attention", "embedding_bag", "intersect_mask", "ref",
-           "PAGE"]
+def segment_intersect_mask(a, b, *, interpret=None):
+    """Fused gap-decode + intersection of two PackedLists (frozen path)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _segment_intersect_mask(a, b, interpret=interpret)
+
+
+__all__ = ["paged_attention", "embedding_bag", "intersect_mask",
+           "segment_intersect_mask", "ref", "PAGE"]

@@ -54,3 +54,16 @@ def intersect_mask_ref(a, b, invalid: int = 0xFFFFFFFF):
     pos = jnp.minimum(pos, b.shape[0] - 1)
     hit = (b[pos] == a) & (a != jnp.uint32(invalid))
     return hit.astype(jnp.int32)
+
+
+def segment_intersect_mask_ref(a_packed, b_packed):
+    """Oracle for the fused segment kernel: decode both PackedLists with
+    the all-blocks jnp decoder, then plain membership."""
+    from repro.kernels.segment_intersect import decode_packed
+    a_ids = decode_packed(a_packed)
+    if a_ids.shape[0] == 0:
+        return jnp.zeros((0,), jnp.int32)
+    b_ids = decode_packed(b_packed)
+    if b_ids.shape[0] == 0:
+        return jnp.zeros(a_ids.shape, jnp.int32)
+    return intersect_mask_ref(a_ids, b_ids)

@@ -1,0 +1,272 @@
+"""Pallas TPU fused gap-decode + sorted-set intersection over frozen
+CSR segments (the lifecycle engine's frozen-path conjunctive hot loop).
+
+Frozen read-only segments store each term's docids gap-compressed in
+128-docid blocks (a byte-aligned PForDelta-lite: per-block byte width
+1/2/4, little-endian gap planes — :func:`pack_docids`).  The paper's
+query path decompresses a block and merges; the host-side numpy walk did
+that one Python int at a time.  Here both lists stream through VMEM one
+COMPRESSED block at a time and every block is decoded on the VPU — a
+static byte-plane unpack (no gathers) followed by a prefix-sum over the
+gap lanes — fused with the same tiled two-pointer intersection rule as
+``postings_intersect``: one 128 x 128 equality matrix per (a_block,
+b_block) pair, advance on block maxima, <= n_a_blocks + n_b_blocks steps.
+
+Inputs are :class:`PackedList`s (ascending deduped docids).  Output is an
+int32 membership mask over a's decoded docid lanes (1 where lane i < n_a
+and a's docid is present in b); compaction happens in the jnp caller.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.compat import pl, pltpu
+
+INVALID = 0xFFFFFFFF
+SEG_BLOCK = 128          # docids per compressed block
+SLAB_WORDS = SEG_BLOCK   # uint32 words DMA'd per block (bw=4 worst case)
+
+class PackedList(NamedTuple):
+    """One term's docid list, block-gap-compressed and device-ready.
+
+    ``woffs[b]`` is the start word of block b's gap plane inside
+    ``payload``; the plane holds 32 * bw words (bw = bytes per gap), and
+    ``payload`` carries SLAB_WORDS trailing pad words so a fixed-size
+    block DMA never overruns.  Lane 0's gap is stored as 0, so a block
+    decodes as ``firsts[b] + cumsum(gaps)``.  The last block is padded by
+    repeating the final docid (gap 0) — harmless for membership tests,
+    masked out of the output by ``n``.
+    """
+    firsts: jax.Array   # uint32[n_blocks]  docid of lane 0
+    bws: jax.Array      # int32[n_blocks]   bytes per gap: 1, 2 or 4
+    woffs: jax.Array    # int32[n_blocks]   payload word offset
+    payload: jax.Array  # uint32[total_words + SLAB_WORDS]
+    n: int              # valid docids (static)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.firsts.shape[0]
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(int(x - 1).bit_length(), 0)
+
+
+def pack_docids(ids: np.ndarray) -> PackedList:
+    """Gap-compress an ascending deduped uint32 docid array (host-side,
+    runs once at segment freeze — off the query path).
+
+    Block count and payload length are padded to the next power of two
+    so a streaming engine sees O(log^2) distinct array-shape pairs — the
+    jitted kernel call caches per shape, and unbucketed lengths would
+    recompile on nearly every new term/segment.  Pad blocks decode to
+    the INVALID sentinel (0xFFFFFFFF first, zero gaps), which can never
+    equal a real docid and sorts above every block maximum, so the
+    two-pointer walk and the membership test ignore them.
+    """
+    ids = np.asarray(ids, np.uint32)
+    n = int(ids.size)
+    if n == 0:
+        return PackedList(
+            firsts=jnp.zeros((0,), jnp.uint32),
+            bws=jnp.zeros((0,), jnp.int32),
+            woffs=jnp.zeros((0,), jnp.int32),
+            payload=jnp.zeros((SLAB_WORDS,), jnp.uint32), n=0)
+    nb = -(-n // SEG_BLOCK)
+    nb_pad = _pow2(nb)
+    firsts = np.full(nb_pad, INVALID, np.uint32)
+    bws = np.ones(nb_pad, np.int32)
+    woffs = np.zeros(nb_pad, np.int32)
+    planes = []
+    words_so_far = 0
+    for b in range(nb):
+        chunk = ids[b * SEG_BLOCK: (b + 1) * SEG_BLOCK].astype(np.int64)
+        pad = SEG_BLOCK - chunk.size
+        if pad:
+            chunk = np.concatenate([chunk, np.full(pad, chunk[-1])])
+        gaps = np.diff(chunk, prepend=chunk[0])          # lane 0 -> 0
+        firsts[b] = chunk[0]
+        g_max = int(gaps.max())
+        bw = 1 if g_max < (1 << 8) else 2 if g_max < (1 << 16) else 4
+        bws[b] = bw
+        dt = {1: "<u1", 2: "<u2", 4: "<u4"}[bw]
+        plane = np.ascontiguousarray(gaps.astype(dt)).view("<u4")
+        woffs[b] = words_so_far
+        words_so_far += plane.size
+        planes.append(plane)
+    # pad blocks read the zeroed overrun region: INVALID + cumsum(0)
+    woffs[nb:] = words_so_far
+    planes.append(np.zeros(
+        _pow2(words_so_far + SLAB_WORDS) - words_so_far, np.uint32))
+    return PackedList(firsts=jnp.asarray(firsts), bws=jnp.asarray(bws),
+                      woffs=jnp.asarray(woffs),
+                      payload=jnp.asarray(np.concatenate(planes)), n=n)
+
+
+def _plane_shifts(shape, bits_each: int):
+    """Per-lane shift amounts as a broadcasted iota over the last axis
+    (Pallas kernels cannot capture constant arrays, and TPU iota must be
+    multi-dimensional anyway)."""
+    sh = jax.lax.broadcasted_iota(jnp.uint32, shape, len(shape) - 1)
+    return sh * jnp.uint32(bits_each)
+
+
+def _unpack_gaps(slab, bw):
+    """Decode one block's gap lanes from its (up to) 128-word slab.
+
+    Static byte-plane unpack — every width reads a fixed reshape of the
+    slab, selected with ``where`` — so the VPU never gathers.
+    ``slab``: uint32[..., SLAB_WORDS]; ``bw``: int32[...] broadcastable.
+    """
+    lead = slab.shape[:-1]
+    s8 = _plane_shifts(lead + (SEG_BLOCK // 4, 4), 8)
+    s16 = _plane_shifts(lead + (SEG_BLOCK // 2, 2), 16)
+    b1 = ((slab[..., : SEG_BLOCK // 4, None] >> s8) & jnp.uint32(0xFF))
+    b2 = ((slab[..., : SEG_BLOCK // 2, None] >> s16) & jnp.uint32(0xFFFF))
+    b1 = b1.reshape(lead + (SEG_BLOCK,))
+    b2 = b2.reshape(lead + (SEG_BLOCK,))
+    bw = jnp.asarray(bw)[..., None]
+    return jnp.where(bw == 1, b1, jnp.where(bw == 2, b2, slab))
+
+
+def decode_packed(packed: PackedList) -> jax.Array:
+    """All-blocks jnp decode: ascending uint32[n_blocks * SEG_BLOCK],
+    INVALID-padded past ``n`` (the query-engine list representation).
+    This is the kernel's oracle and the cross-segment merge's fallback
+    when no kernel is wanted (e.g. >2-term folds on already-compacted
+    lists)."""
+    if packed.n_blocks == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    idx = packed.woffs[:, None] + jnp.arange(SLAB_WORDS, dtype=jnp.int32)
+    slabs = packed.payload[idx]                      # [nb, SLAB_WORDS]
+    gaps = _unpack_gaps(slabs, packed.bws)
+    ids = packed.firsts[:, None] + jnp.cumsum(gaps, axis=-1,
+                                              dtype=jnp.uint32)
+    flat = ids.reshape(-1)
+    lane = jnp.arange(flat.shape[0], dtype=jnp.int32)
+    return jnp.where(lane < packed.n, flat, jnp.uint32(INVALID))
+
+
+def _kernel(a_firsts, a_bws, a_woffs, b_firsts, b_bws, b_woffs, n_valid,
+            a_hbm, b_hbm, o_hbm, a_slab, b_slab, m_buf,
+            sem_a, sem_b, sem_o, *, na_blocks: int, nb_blocks: int):
+    def copy_a(ia):
+        return pltpu.make_async_copy(
+            a_hbm.at[pl.ds(a_woffs[ia], SLAB_WORDS)], a_slab, sem_a)
+
+    def copy_b(ib):
+        return pltpu.make_async_copy(
+            b_hbm.at[pl.ds(b_woffs[ib], SLAB_WORDS)], b_slab, sem_b)
+
+    def flush(ia):
+        cp = pltpu.make_async_copy(
+            m_buf, o_hbm.at[pl.ds(ia * SEG_BLOCK, SEG_BLOCK)], sem_o)
+        cp.start()
+        cp.wait()
+
+    copy_a(0).start()
+    copy_a(0).wait()
+    copy_b(0).start()
+    copy_b(0).wait()
+    m_buf[...] = jnp.zeros((SEG_BLOCK,), jnp.int32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (SEG_BLOCK, 1), 0)
+    lane = lane.reshape(SEG_BLOCK)
+
+    def step(_, carry):
+        ia, ib = carry
+        live = ia < na_blocks
+        iam = jnp.minimum(ia, na_blocks - 1)
+        ibm = jnp.minimum(ib, nb_blocks - 1)
+        # fused decode: byte-plane unpack + gap prefix-sum, in VMEM.
+        a_ids = a_firsts[iam] + jnp.cumsum(
+            _unpack_gaps(a_slab[...], a_bws[iam]), dtype=jnp.uint32)
+        b_ids = b_firsts[ibm] + jnp.cumsum(
+            _unpack_gaps(b_slab[...], b_bws[ibm]), dtype=jnp.uint32)
+        valid = (iam * SEG_BLOCK + lane) < n_valid[0]
+        eq = (a_ids[:, None] == b_ids[None, :]) & valid[:, None]
+        hits = jnp.max(eq.astype(jnp.int32), axis=1)
+        m_buf[...] = jnp.where(live, jnp.maximum(m_buf[...], hits),
+                               m_buf[...])
+        a_max = a_ids[SEG_BLOCK - 1]   # pad repeats the last docid
+        b_max = b_ids[SEG_BLOCK - 1]
+        b_done = ib >= nb_blocks - 1
+        adv_a = live & ((a_max <= b_max) | b_done)
+        adv_b = live & ((b_max <= a_max) & ~b_done)
+
+        @pl.when(adv_a)
+        def _():
+            flush(iam)
+            m_buf[...] = jnp.zeros((SEG_BLOCK,), jnp.int32)
+
+        ia2 = ia + adv_a.astype(jnp.int32)
+        ib2 = ib + adv_b.astype(jnp.int32)
+
+        @pl.when(adv_a & (ia2 < na_blocks))
+        def _():
+            cp = copy_a(ia2)
+            cp.start()
+            cp.wait()
+
+        @pl.when(adv_b)
+        def _():
+            cp = copy_b(ib2)
+            cp.start()
+            cp.wait()
+
+        return ia2, ib2
+
+    jax.lax.fori_loop(0, na_blocks + nb_blocks, step, (0, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("na_blocks", "nb_blocks",
+                                             "interpret"))
+def _call(a_firsts, a_bws, a_woffs, a_payload,
+          b_firsts, b_bws, b_woffs, b_payload, n_valid, *,
+          na_blocks: int, nb_blocks: int, interpret: bool = True):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+                  pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((SLAB_WORDS,), jnp.uint32),
+            pltpu.VMEM((SLAB_WORDS,), jnp.uint32),
+            pltpu.VMEM((SEG_BLOCK,), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, na_blocks=na_blocks,
+                          nb_blocks=nb_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((na_blocks * SEG_BLOCK,), jnp.int32),
+        interpret=interpret,
+    )(a_firsts, a_bws, a_woffs, b_firsts, b_bws, b_woffs, n_valid,
+      a_payload, b_payload)
+
+
+def segment_intersect_mask(a: PackedList, b: PackedList, *,
+                           interpret: bool = True) -> jax.Array:
+    """Membership mask of a's docids in b, both block-gap-compressed.
+
+    Returns int32[a.n_blocks * SEG_BLOCK] (1 where lane < a.n and a's
+    docid occurs in b).  Decode happens inside the kernel; neither list
+    is materialised uncompressed in HBM.
+    """
+    if a.n_blocks == 0:
+        return jnp.zeros((0,), jnp.int32)
+    if b.n_blocks == 0:
+        return jnp.zeros((a.n_blocks * SEG_BLOCK,), jnp.int32)
+    n_valid = jnp.asarray([a.n], jnp.int32)
+    return _call(a.firsts, a.bws, a.woffs, a.payload,
+                 b.firsts, b.bws, b.woffs, b.payload, n_valid,
+                 na_blocks=a.n_blocks, nb_blocks=b.n_blocks,
+                 interpret=interpret)

@@ -169,3 +169,65 @@ def test_intersect_mask_used_by_query_engine():
     want, n_want = intersect_asc(jnp.asarray(a), 80, jnp.asarray(b), 120)
     assert int(n_got) == int(n_want)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# segment_intersect (fused gap-decode + intersect over frozen segments)
+# ---------------------------------------------------------------------------
+from repro.kernels.segment_intersect import (SEG_BLOCK, decode_packed,
+                                             pack_docids)
+
+
+def _rand_asc(n, hi):
+    if n == 0:
+        return np.zeros(0, np.uint32)
+    return np.sort(RNG.choice(hi, n, replace=False)).astype(np.uint32)
+
+
+def test_pack_decode_roundtrip():
+    """decode_packed inverts pack_docids; padding lanes are INVALID."""
+    for n, hi in [(1, 10), (5, 100), (127, 1 << 12), (128, 1 << 12),
+                  (129, 1 << 12), (1000, 1 << 28), (300, 1 << 31)]:
+        ids = _rand_asc(n, hi)
+        p = pack_docids(ids)
+        dec = np.asarray(decode_packed(p))
+        assert dec.shape[0] == p.n_blocks * SEG_BLOCK
+        np.testing.assert_array_equal(dec[:n], ids)
+        assert np.all(dec[n:] == 0xFFFFFFFF)
+
+
+def test_pack_picks_narrow_byte_planes():
+    """Dense lists pack into 1-byte gap planes (the compression claim):
+    32 payload words per 128-docid block instead of 128."""
+    ids = np.arange(0, 512, dtype=np.uint32)          # gaps == 1
+    p = pack_docids(ids)
+    assert np.asarray(p.bws).tolist() == [1, 1, 1, 1]
+    sparse = pack_docids(_rand_asc(512, 1 << 31))     # huge gaps
+    assert int(np.asarray(sparse.bws).max()) >= 2
+
+
+@pytest.mark.parametrize("na,nb,hi", [
+    (100, 100, 1000), (513, 999, 4000), (128, 128, 1 << 20),
+    (1000, 50, 1 << 28), (1, 1, 4), (77, 400, 500),
+])
+def test_segment_intersect_mask(na, nb, hi):
+    a = _rand_asc(na, hi)
+    b = _rand_asc(nb, hi)
+    A, B = pack_docids(a), pack_docids(b)
+    got = np.asarray(ops.segment_intersect_mask(A, B, interpret=True))
+    want = np.asarray(ref.segment_intersect_mask_ref(A, B))
+    np.testing.assert_array_equal(got, want)
+    hits = np.asarray(decode_packed(A))[:na][got[:na].astype(bool)]
+    assert set(hits.tolist()) == set(a.tolist()) & set(b.tolist())
+
+
+def test_segment_intersect_mask_edges():
+    full = _rand_asc(300, 2000)
+    hi = (_rand_asc(100, 100) + np.uint32(100_000))
+    empty = np.zeros(0, np.uint32)
+    for a, b in [(empty, full), (full, empty), (full, hi), (full, full),
+                 (hi, hi)]:
+        A, B = pack_docids(a), pack_docids(b)
+        got = np.asarray(ops.segment_intersect_mask(A, B, interpret=True))
+        want = np.asarray(ref.segment_intersect_mask_ref(A, B))
+        np.testing.assert_array_equal(got, want)

@@ -2,6 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import analytical, history, policies, segments
 from repro.core.index import ActiveSegment
@@ -85,6 +86,23 @@ def test_history_freqs_from_frozen():
                           synth.term_freqs(docs, spec.vocab))
 
 
+def test_churn_ties_break_stably():
+    """Regression: frequency ties at the top-k boundary must be broken
+    deterministically (lowest term id wins), not by whatever order the
+    sort engine left equal keys in.  Identical inputs -> zero churn, and
+    a tied-selection set must be the canonical lowest-index one."""
+    flat = np.full(50, 7, np.int64)
+    assert history.churn(flat, flat, top_k=10) == 0.0
+    assert history.churn(flat, flat.copy(), top_k=10) == 0.0
+    # a: all tied -> canonical top-2 is {0, 1}; b: terms 0/1 clearly top.
+    a = np.asarray([3, 3, 3, 3])
+    b = np.asarray([4, 4, 3, 3])
+    assert history.churn(a, b, top_k=2) == 0.0
+    # and when b's winners are the OTHER tied pair, churn is total.
+    c = np.asarray([3, 3, 4, 4])
+    assert history.churn(a, c, top_k=2) == pytest.approx(1.0)
+
+
 def test_churn_metric():
     a = np.asarray([100, 90, 80, 1, 1])
     assert history.churn(a, a, top_k=3) == 0.0          # identical -> 0
@@ -100,6 +118,48 @@ def test_codec_roundtrip_random():
         vals = np.sort(rng.choice(1 << 30, size=n, replace=False))
         codec = segments.ForBlocks.encode(vals.astype(np.uint64))
         assert np.array_equal(codec.decode(), vals)
+
+
+@st.composite
+def gap_streams(draw):
+    """Arbitrary non-decreasing docid streams, by their gap profile:
+    all-zero gaps (duplicate-run postings), small mixed gaps, full
+    32-bit-width gaps, single-posting lists, and block-boundary lengths."""
+    kind = draw(st.sampled_from(
+        ["zeros", "mixed", "wide", "single", "edge"]))
+    start = draw(st.integers(0, 1 << 20))
+    if kind == "single":
+        return [start]
+    if kind == "edge":
+        n = draw(st.sampled_from([127, 128, 129, 255, 256, 257]))
+        gaps = draw(st.lists(st.integers(0, 3), min_size=n - 1,
+                             max_size=n - 1))
+    elif kind == "zeros":
+        n = draw(st.integers(2, 300))
+        gaps = [0] * (n - 1)
+    elif kind == "wide":
+        # max-bit-width blocks: gaps up to the full 32-bit range
+        n = draw(st.integers(2, 40))
+        gaps = draw(st.lists(st.integers(0, (1 << 32) - 1),
+                             min_size=n - 1, max_size=n - 1))
+    else:
+        n = draw(st.integers(2, 300))
+        gaps = draw(st.lists(st.integers(0, 1000), min_size=n - 1,
+                             max_size=n - 1))
+    return np.cumsum([start] + list(gaps)).tolist()
+
+
+@given(gap_streams())
+@settings(max_examples=120, deadline=None)
+def test_codec_roundtrip_property(vals):
+    """ForBlocks encode/decode is the identity on ANY non-decreasing
+    stream: zero gaps, single postings, max-width blocks, block edges."""
+    vals = np.asarray(vals, np.uint64)
+    codec = segments.ForBlocks.encode(vals)
+    assert codec.n == len(vals)
+    assert np.array_equal(codec.decode(), vals)
+    # compressed payload is never wider than the raw 64-bit stream
+    assert codec.payload.nbytes <= vals.nbytes + 8
 
 
 def test_compression_shrinks_dense_lists():

@@ -164,6 +164,110 @@ def test_sp_memory_matches_analytical_extension():
             assert got == want, (sp, f, got, want)
 
 
+# ---------------------------------------------------------------------------
+# Slice reclamation (freeze -> free list -> reuse): the Goldilocks loop
+# ---------------------------------------------------------------------------
+def test_memory_drops_after_freeze_release():
+    """Freezing a segment and releasing its slices must drop the LIVE
+    slot count to zero while the high-water mark stays put."""
+    from repro.core import segments
+    z = (1, 4, 7)
+    layout, state = _ingest_freqs(z, [40, 3, 17])
+    used = slicepool.memory_slots_used(layout, state)
+    assert used > 0
+    assert slicepool.memory_high_water_slots(layout, state) == used
+    fz = segments.freeze_state(layout, np.asarray(state.heap),
+                               np.asarray(state.tail),
+                               np.asarray(state.freq), n_docs=60)
+    # the freeze walked exactly the allocated slices, per pool
+    n_freed = sum(len(s) for s in fz.freed_slices)
+    assert n_freed == int(np.asarray(state.watermark).sum())
+    released = slicepool.release_slices(layout, state, fz.freed_slices)
+    assert slicepool.memory_slots_used(layout, released) == 0
+    assert slicepool.memory_high_water_slots(layout, released) == used
+    assert np.all(np.asarray(released.tail) == NULL)
+    assert np.all(np.asarray(released.freq) == 0)
+    # frozen CSR kept every posting
+    assert fz.total_postings == 40 + 3 + 17
+
+
+def test_freed_slices_reused_watermark_stops_growing():
+    """Steady churn: identical segments rolled through the same pools
+    must stop bumping the watermark once the free list covers demand."""
+    from repro.core import segments
+    layout = PoolLayout(z=(1, 4, 7, 11),
+                        slices_per_pool=(4096, 2048, 512, 64))
+    spec_docs = synth.zipf_corpus(
+        synth.CorpusSpec(vocab=300, n_docs=100, seed=8))
+    ss = segments.SegmentSet(layout, 300, docs_per_segment=100)
+    hw = []
+    for _ in range(4):
+        ss.ingest(jnp.asarray(spec_docs))        # fills + rolls over
+        hw.append(slicepool.memory_high_water_slots(
+            layout, ss.active.state))
+    assert len(ss.frozen) == 4
+    # identical stream per segment -> identical demand -> zero growth
+    # after the first rollover seeds the free list.
+    assert hw[1] == hw[2] == hw[3], hw
+    # live slots are back to zero after each full-segment rollover
+    assert slicepool.memory_slots_used(layout, ss.active.state) == 0
+    # and queries over the recycled pools still see the latest postings
+    freqs = synth.term_freqs(spec_docs, 300)
+    assert np.array_equal(ss.frozen[-1].term_freqs(), freqs)
+
+
+def test_free_list_allocation_preserves_overflow_stickiness():
+    """Releasing slices lets later inserts succeed from the free list,
+    but a pool-exhaustion overflow observed earlier must stay sticky."""
+    from repro.core import segments
+    layout = PoolLayout(z=(1, 4), slices_per_pool=(2, 1))
+    ingest = slicepool.make_ingest_fn(layout, 2)
+    state = slicepool.init_state(layout, 2)
+    # term 0: 17 fit (2 + 15), the 18th needs a 2nd pool-1 slice -> overflow
+    state = ingest(state, jnp.zeros(18, jnp.uint32),
+                   jnp.arange(18, dtype=jnp.uint32))
+    assert bool(state.overflow)
+    fz = segments.freeze_state(layout, np.asarray(state.heap),
+                               np.asarray(state.tail),
+                               np.asarray(state.freq), n_docs=18)
+    state = slicepool.release_slices(layout, state, fz.freed_slices)
+    assert slicepool.memory_slots_used(layout, state) == 0
+    # the freed pool-0 and pool-1 slices are reused: 17 postings fit again
+    state = ingest(state, jnp.ones(17, jnp.uint32),
+                   jnp.arange(100, 117, dtype=jnp.uint32))
+    assert int(state.freq[1]) == 17
+    # reuse did not bump the watermark...
+    assert np.asarray(state.watermark).tolist() == [1, 1]
+    # ...returned correct data...
+    mat = slicepool.make_materializer(layout, 4, 32)
+    vals, cnt = mat(state, jnp.uint32(1))
+    assert int(cnt) == 17
+    assert np.array_equal(np.asarray(vals)[:17],
+                          np.arange(100, 117, dtype=np.uint32)[::-1])
+    # ...and the overflow bit stayed sticky across the release.
+    assert bool(state.overflow), "overflow must survive reclamation"
+
+
+def test_release_rejects_double_free():
+    """Re-releasing slices that already sit on the free list must fail
+    loudly even when the free list has spare capacity — silent aliasing
+    would hand one slice to two term chains."""
+    from repro.core import segments
+    z = (1, 4)
+    layout, state = _ingest_freqs(z, [5])
+    fz = segments.freeze_state(layout, np.asarray(state.heap),
+                               np.asarray(state.tail),
+                               np.asarray(state.freq), n_docs=5)
+    state = slicepool.release_slices(layout, state, fz.freed_slices)
+    with pytest.raises(ValueError, match="double release"):
+        slicepool.release_slices(layout, state, fz.freed_slices)
+    # never-allocated slice indices are rejected too
+    with pytest.raises(ValueError, match="allocated range"):
+        slicepool.release_slices(
+            layout, state,
+            [np.asarray([3], np.int32)] + [np.zeros(0, np.int32)])
+
+
 def test_zero_copy_invariant():
     """Old postings bytes are never rewritten by later inserts."""
     z = (1, 4, 7, 11)

@@ -188,3 +188,100 @@ def test_sharded_index_engine_matches_single_device():
     single-device engine."""
     res = _run_subprocess(SCRIPT_INDEX)
     assert res["n_queries"] == 13
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle equivalence: K rollovers + reclamation == never-frozen index
+# ---------------------------------------------------------------------------
+SCRIPT_LIFECYCLE = textwrap.dedent("""
+    from repro.dist import collectives as C
+    C.force_host_device_count(4)
+    import json
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import analytical, query
+    from repro.core.index import ActiveSegment
+    from repro.core.lifecycle import (LifecycleEngine,
+                                      ShardedLifecycleEngine)
+    from repro.core.pointers import PoolLayout
+    from repro.core.sharded_index import make_doc_mesh
+    from repro.data import synth
+
+    Z = (1, 4, 7, 11)
+    layout = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 512, 64))
+    spec = synth.CorpusSpec(vocab=800, n_docs=720, seed=17)
+    docs = synth.zipf_corpus(spec)
+    freqs = synth.term_freqs(docs, spec.vocab)
+    fmax = int(freqs.max())
+    max_slices = int(analytical.slices_needed(Z, fmax)) + 1
+    max_len = 1 << (fmax - 1).bit_length()
+
+    # never-frozen reference: one giant active segment, same stream
+    ref = ActiveSegment(layout, spec.vocab)
+    ref.ingest(jnp.asarray(docs)); ref.check_health()
+    eng = query.make_engine(layout, max_slices, max_len=max_len)
+
+    # K=3 rollovers + a half-full active segment, both deployments.
+    # 200-docs segments over a 720-doc stream -> frozen at 200/400/600.
+    mesh, rules = make_doc_mesh(4)
+    lives = {
+        "single": LifecycleEngine(layout, spec.vocab, 200,
+                                  max_slices=max_slices, max_len=max_len),
+        "sharded": ShardedLifecycleEngine(layout, spec.vocab, 200, mesh,
+                                          max_slices=max_slices,
+                                          max_len=max_len, rules=rules),
+    }
+    for name, life in lives.items():
+        for i in range(0, 720, 40):
+            life.ingest(docs[i:i + 40])
+        life.check_health()
+        assert life.stats.rollovers == 3, (name, life.stats)
+        assert life.doc_base == 600, name
+        # reclamation bound: the rolled-over engine's heap high-water is
+        # one segment's demand -- strictly below the never-frozen index.
+        assert (life.memory_high_water_slots()
+                < ref.memory_slots_used()), name
+
+    top = np.argsort(-freqs)
+    pairs = [(0, 1), (2, 5), (1, 20), (10, 50)]
+    out = {"n_queries": 0}
+
+    def expect(kind, ts):
+        pad = np.zeros(8, np.uint32); pad[: len(ts)] = ts
+        if kind == "phrase":
+            d, n = eng.phrase(ref.state, jnp.uint32(ts[0]),
+                              jnp.uint32(ts[1]))
+        else:
+            fn = getattr(eng, kind)
+            d, n = fn(ref.state, jnp.asarray(pad), jnp.int32(len(ts)))
+        return np.asarray(d)[: int(n)].astype(np.int64).tolist()
+
+    for name, life in lives.items():
+        for a, b in pairs:
+            ts = [int(top[a]), int(top[b])]
+            for kind in ("conjunctive", "disjunctive"):
+                got = getattr(life, kind)(ts).tolist()
+                want = expect(kind, ts)
+                assert got == want, (name, kind, ts, got[:8], want[:8])
+                out["n_queries"] += 1
+        ts3 = [int(top[0]), int(top[1]), int(top[2])]
+        assert life.conjunctive(ts3).tolist() == expect("conjunctive", ts3)
+        out["n_queries"] += 1
+        for a, b in [(0, 1), (2, 3), (1, 0)]:
+            t1, t2 = int(top[a]), int(top[b])
+            got = life.phrase(t1, t2).tolist()
+            assert got == expect("phrase", [t1, t2]), (name, t1, t2)
+            out["n_queries"] += 1
+    print(json.dumps(out))
+""")
+
+
+def test_lifecycle_rollover_matches_never_frozen():
+    """An index driven through 3 lifecycle rollovers (freeze -> slice
+    reclamation -> recycled active segment) must return bit-identical
+    conjunctive/disjunctive/phrase results to a never-frozen index fed
+    the same stream — single-device AND 4-shard — while its heap
+    high-water mark stays below the never-frozen index's footprint."""
+    res = _run_subprocess(SCRIPT_LIFECYCLE)
+    assert res["n_queries"] == 24
