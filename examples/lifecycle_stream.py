@@ -8,8 +8,16 @@ roughly one segment's demand while queries keep seeing the entire
 history, newest tweets first, through one unified path (active slice
 pools + fused decode+intersect kernel over the frozen blocks).
 
+Ingest runs the PR-4 batch-parallel BULK allocator (sort occurrences by
+term, walk the slice-size progression analytically, allocate batch-wide,
+one fused scatter-append) — the engine default; pass
+``bulk_ingest=False`` to replay the same stream through the per-posting
+scan oracle and watch docs/s collapse.
+
     PYTHONPATH=src python examples/lifecycle_stream.py
 """
+import time
+
 import numpy as np
 
 from repro.core import analytical
@@ -33,8 +41,12 @@ life = LifecycleEngine(
     max_len=1 << (fmax - 1).bit_length())
 
 # --- the stream: batches arrive forever; rollovers happen in-line -----
+# the first batch is ingested before the clock starts so the printed
+# docs/s measures steady-state bulk ingest, not jit compilation
 seen_rollovers = 0
-for i in range(0, len(stream), BATCH):
+life.ingest(stream[:BATCH])
+t0 = time.perf_counter()
+for i in range(BATCH, len(stream), BATCH):
     life.ingest(stream[i: i + BATCH])
     if life.stats.rollovers != seen_rollovers:
         seen_rollovers = life.stats.rollovers
@@ -43,8 +55,11 @@ for i in range(0, len(stream), BATCH):
               f"live {life.stats.live_slots} "
               f"(slices recycled to the free lists)")
 life.check_health()
-print(f"stream done: {life.stats.docs_ingested} docs, "
-      f"{seen_rollovers} frozen segments + "
+wall = time.perf_counter() - t0
+timed_docs = life.stats.docs_ingested - BATCH
+print(f"stream done: {life.stats.docs_ingested} docs "
+      f"({timed_docs / wall:.0f} docs/s after warmup, bulk ingest incl. "
+      f"freeze/reclaim pauses), {seen_rollovers} frozen segments + "
       f"{life.segments.active.next_docid} docs active")
 
 # --- unified queries: one call spans active pool + every frozen CSR ---

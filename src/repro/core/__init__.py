@@ -1,12 +1,13 @@
 """Core: the paper's slice-pool dynamic postings allocation framework."""
 from repro.core.pointers import NULL, PoolLayout, production_layout
-from repro.core.slicepool import PoolState, init_state, make_ingest_fn
+from repro.core.slicepool import (PoolState, init_state,
+                                  make_bulk_ingest_fn, make_ingest_fn)
 from repro.core.index import ActiveSegment
 from repro.core.query import make_engine
 from repro.core import analytical, policies
 
 __all__ = [
     "NULL", "PoolLayout", "production_layout", "PoolState", "init_state",
-    "make_ingest_fn", "ActiveSegment", "make_engine", "analytical",
-    "policies",
+    "make_ingest_fn", "make_bulk_ingest_fn", "ActiveSegment",
+    "make_engine", "analytical", "policies",
 ]

@@ -3,7 +3,8 @@
 ``ActiveSegment`` owns a :class:`~repro.core.slicepool.PoolState` plus the
 docid high-water mark; tweets arrive as (batch, max_len) padded term-id
 matrices and are flattened into a (term, posting) stream consumed by the
-scan-based allocator.  The dictionary is implicit: term ids index the
+batch-parallel bulk allocator (the per-posting scan remains as the
+semantics oracle).  The dictionary is implicit: term ids index the
 ``tail``/``freq`` arrays (string->id lives in data/tokenizer.py, host-side,
 exactly as Earlybird's dictionary sits outside the postings pools).
 """
@@ -23,16 +24,23 @@ from repro.core.pointers import PoolLayout
 
 @dataclasses.dataclass
 class ActiveSegment:
+    """``bulk_ingest=True`` (default) uses the batch-parallel allocator
+    (:func:`repro.core.slicepool.make_bulk_ingest_fn`); ``False`` keeps
+    the per-posting ``lax.scan`` — the bit-exactness oracle the bulk
+    path is tested against (both produce identical ``PoolState``)."""
     layout: PoolLayout
     vocab_size: int
     max_docs: int = post.MAX_DOC
     state: slicepool.PoolState = None
     next_docid: int = 0
+    bulk_ingest: bool = True
 
     def __post_init__(self):
         if self.state is None:
             self.state = slicepool.init_state(self.layout, self.vocab_size)
-        self._ingest = slicepool.make_ingest_fn(self.layout, self.vocab_size)
+        make = (slicepool.make_bulk_ingest_fn if self.bulk_ingest
+                else slicepool.make_ingest_fn)
+        self._ingest = make(self.layout, self.vocab_size)
         self._flatten = make_flattener()
 
     @property

@@ -278,14 +278,16 @@ class LifecycleEngine(_LifecycleBase):
                  docs_per_segment: int, *, max_slices: int, max_len: int,
                  max_query_len: int = 8, max_segments: int = 12,
                  use_kernel: bool = True,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 bulk_ingest: bool = True):
         self.layout = layout
         self.vocab_size = vocab_size
         self.max_query_len = max_query_len
         self.use_kernel = use_kernel
         self.interpret = interpret
         self.segments = seg_mod.SegmentSet(
-            layout, vocab_size, docs_per_segment, max_segments=max_segments)
+            layout, vocab_size, docs_per_segment, max_segments=max_segments,
+            bulk_ingest=bulk_ingest)
         self.engine = q.make_engine(layout, max_slices, max_len,
                                     max_query_len, use_kernel=use_kernel,
                                     interpret=interpret)
@@ -316,7 +318,8 @@ class ShardedLifecycleEngine(_LifecycleBase):
                  max_len: int, max_query_len: int = 8,
                  max_segments: int = 12, rules=None,
                  use_kernel: bool = True,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 bulk_ingest: bool = True):
         self.layout = layout
         self.vocab_size = vocab_size
         self.max_query_len = max_query_len
@@ -324,7 +327,7 @@ class ShardedLifecycleEngine(_LifecycleBase):
         self.interpret = interpret
         self.segments = shx.ShardedSegmentSet(
             layout, vocab_size, docs_per_segment, mesh, rules=rules,
-            max_segments=max_segments)
+            max_segments=max_segments, bulk_ingest=bulk_ingest)
         self.engine = shx.make_sharded_engine(
             layout, mesh, max_slices, max_len, max_query_len,
             rules=self.segments.rules, use_kernel=use_kernel,

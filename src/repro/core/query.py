@@ -71,9 +71,13 @@ def intersect_asc(a, na, b, nb):
 
 
 def union_asc(a, na, b, nb):
+    """Union of two ascending INVALID-padded lists, sized to hold BOTH
+    inputs (``|a| + |b|`` wide) — a union can be bigger than either
+    operand, so truncating to ``|a|`` silently dropped docids whenever
+    ``|A ∪ B| > |a|``.  Callers that need a narrower result slice it
+    down explicitly with their own capacity argument."""
     merged = jnp.sort(jnp.concatenate([a, b]))
-    out, n = dedup_asc(merged)
-    return out[: a.shape[0]], jnp.minimum(n, a.shape[0])
+    return dedup_asc(merged)
 
 
 class QueryEngine(NamedTuple):
@@ -87,7 +91,10 @@ class QueryEngine(NamedTuple):
     postings_desc: callable     # (state, term) -> (uint32[max_len], n)
     docids_asc: callable        # (state, term) -> (uint32[max_len], n)
     conjunctive: callable       # (state, terms[max_q], n_terms) -> (desc, n)
-    disjunctive: callable       # (state, terms[max_q], n_terms) -> (desc, n)
+    disjunctive: callable       # -> (desc[max_q * max_len], n): unions
+                                #    GROW, so the result is sized to hold
+                                #    every term's full list (no silent
+                                #    truncation of union members)
     phrase: callable            # (state, t1, t2) -> (desc ids, n)
     read_all: callable          # (state, terms[max_q], n_terms) -> checksum
     topk_conjunctive: callable  # (state, terms, n_terms, k) -> (desc[k], n)
@@ -154,7 +161,13 @@ def make_engine(layout: PoolLayout, max_slices: int, max_len: int,
         return _fold_terms(_intersect, state, terms, n_terms)
 
     def disjunctive_asc(state, terms, n_terms):
-        return _fold_terms(union_asc, state, terms, n_terms)
+        # a union GROWS: the result is sized to hold max_query_len whole
+        # per-term lists.  One flatten + sort + dedup over every active
+        # term's list equals the pairwise union fold, with a single sort.
+        ids, ns = _gather_terms(state, terms)   # [max_q, max_len]
+        live = jnp.arange(max_query_len)[:, None] < n_terms
+        flat = jnp.where(live, ids, INVALID).reshape(-1)
+        return dedup_asc(jnp.sort(flat))
 
     @jax.jit
     def conjunctive(state, terms, n_terms):

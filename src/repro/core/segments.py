@@ -216,18 +216,21 @@ class SegmentSet:
     """At most one active segment + N frozen ones (paper §3.1)."""
 
     def __init__(self, layout: PoolLayout, vocab_size: int,
-                 docs_per_segment: int, max_segments: int = 12):
+                 docs_per_segment: int, max_segments: int = 12,
+                 bulk_ingest: bool = True):
         self.layout = layout
         self.vocab_size = vocab_size
         self.docs_per_segment = docs_per_segment
         self.max_segments = max_segments
+        self.bulk_ingest = bulk_ingest
         self.frozen: List[FrozenSegment] = []
         self.active = self._new_active()
         self._doc_base = 0
 
     def _new_active(self, state=None) -> ActiveSegment:
         return ActiveSegment(self.layout, self.vocab_size,
-                             max_docs=self.docs_per_segment, state=state)
+                             max_docs=self.docs_per_segment, state=state,
+                             bulk_ingest=self.bulk_ingest)
 
     def ingest(self, docs, **kw) -> None:
         self.active.ingest(docs, **kw)

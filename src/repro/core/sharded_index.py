@@ -173,6 +173,7 @@ class ShardedActiveSegment:
     max_docs: int = post.MAX_DOC
     state: slicepool.PoolState = None
     next_docid: int = 0
+    bulk_ingest: bool = True
 
     def __post_init__(self):
         if self.rules is None:
@@ -183,7 +184,8 @@ class ShardedActiveSegment:
             self.state = slicepool.init_sharded_state(
                 self.layout, self.vocab_size, self.num_shards)
         self._ingest = _make_sharded_ingest(
-            self.layout, self.vocab_size, self.mesh, self._axes)
+            self.layout, self.vocab_size, self.mesh, self._axes,
+            bulk_ingest=self.bulk_ingest)
         # default SP(z0) table, built once — ingest is the streaming hot
         # path and must not allocate a vocab-sized buffer per batch
         self._zero_table = jnp.zeros((self.vocab_size,), jnp.uint32)
@@ -231,10 +233,14 @@ class ShardedActiveSegment:
 
 
 def _make_sharded_ingest(layout: PoolLayout, vocab_size: int,
-                         mesh: Mesh, axes):
-    """shard_map ingest: every device runs the scan allocator on its own
-    doc block and pool slice — zero cross-shard communication."""
-    inner = slicepool.make_ingest_fn(layout, vocab_size)
+                         mesh: Mesh, axes, bulk_ingest: bool = True):
+    """shard_map ingest: every device runs the (bulk, by default)
+    allocator on its own doc block and pool slice — the batch-parallel
+    sort/alloc/scatter pipeline is shard-local throughout, so ingest
+    stays zero-communication exactly like the scan path it replaces."""
+    inner = (slicepool.make_bulk_ingest_fn(layout, vocab_size)
+             if bulk_ingest else
+             slicepool.make_ingest_fn(layout, vocab_size))
     flatten = make_flattener()
     d = _dim(axes)
     sspec = _state_specs(d)
@@ -260,8 +266,11 @@ class ShardedQueryEngine(NamedTuple):
     """Batched multi-query evaluation over a sharded PoolState.
 
     All callables take query BATCHES (leading ``Q`` axis) and return
-    ``(desc uint32[Q, S * max_len], n int32[Q])`` — globally-descending
-    docids, INVALID-padded, duplicate-free.
+    ``(desc uint32[Q, S * W], n int32[Q])`` — globally-descending
+    docids, INVALID-padded, duplicate-free — where ``W`` is the
+    per-shard list width: ``max_len`` for conjunctive/phrase and
+    ``max_query_len * max_len`` for disjunctive (unions grow past one
+    term's list, so they are never truncated to it).
     """
     conjunctive: Callable       # (state, terms[Q, max_q], n_terms[Q])
     disjunctive: Callable       # (state, terms[Q, max_q], n_terms[Q])
@@ -371,13 +380,15 @@ class ShardedSegmentSet:
 
     def __init__(self, layout: PoolLayout, vocab_size: int,
                  docs_per_segment: int, mesh: Mesh,
-                 rules: Optional[shd.Rules] = None, max_segments: int = 12):
+                 rules: Optional[shd.Rules] = None, max_segments: int = 12,
+                 bulk_ingest: bool = True):
         self.layout = layout
         self.vocab_size = vocab_size
         self.mesh = mesh
         self.rules = rules or shd.default_rules(mesh)
         self.docs_per_segment = docs_per_segment
         self.max_segments = max_segments
+        self.bulk_ingest = bulk_ingest
         self.frozen: List[ShardedFrozenSegment] = []
         self._doc_base = 0
         self.active = self._new_active()
@@ -388,7 +399,8 @@ class ShardedSegmentSet:
     def _new_active(self, state=None) -> ShardedActiveSegment:
         return ShardedActiveSegment(
             self.layout, self.vocab_size, self.mesh, rules=self.rules,
-            max_docs=self.docs_per_segment, state=state)
+            max_docs=self.docs_per_segment, state=state,
+            bulk_ingest=self.bulk_ingest)
 
     @property
     def num_shards(self) -> int:

@@ -1,7 +1,13 @@
-"""Functional slice-pool allocator (paper §3.2-3.3), jit/scan friendly.
+"""Functional slice-pool allocator (paper §3.2-3.3), jit friendly.
 
-The allocator state is a pytree of fixed-shape arrays so the whole ingest
-loop runs as a single ``jax.lax.scan`` on device:
+Two interchangeable, BIT-IDENTICAL ingest implementations share one
+state layout: the per-posting ``jax.lax.scan`` (:func:`make_ingest_fn`,
+the semantics oracle) and the batch-parallel bulk allocator
+(:func:`make_bulk_ingest_fn`, the hot path — sorts a whole arrival
+batch by term, walks the slice-size progression analytically, allocates
+batch-wide and applies every write in one fused scatter-append).
+
+The allocator state is a pytree of fixed-shape arrays:
 
   * ``heap``      — one flat uint32 array holding every pool back-to-back
                     (pool p occupies ``[base_p, base_p + slices_p * 2**z_p)``).
@@ -31,10 +37,12 @@ into a read-only CSR segment.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import pointers as ptr_mod
 from repro.core.pointers import NULL, PoolLayout
@@ -86,7 +94,6 @@ def memory_slots_used(layout: PoolLayout, state: PoolState) -> int:
     single-shard state (``watermark[P]``) or a sharded one
     (``watermark[S, P]``); sharded states sum over shards.
     """
-    import numpy as np
     live = (np.asarray(state.watermark, np.int64)
             - np.asarray(state.free_count, np.int64))
     return int(np.sum(live * np.asarray(layout.slice_sizes, np.int64)))
@@ -99,14 +106,12 @@ def memory_high_water_slots(layout: PoolLayout, state: PoolState) -> int:
     churn with reclamation this is bounded by one segment's demand — the
     lifecycle benchmark asserts exactly that.
     """
-    import numpy as np
     wm = np.asarray(state.watermark, np.int64)
     return int(np.sum(wm * np.asarray(layout.slice_sizes, np.int64)))
 
 
 def shard_slots_used(layout: PoolLayout, state: PoolState):
     """Per-shard LIVE allocated slots for a sharded state (int64[S])."""
-    import numpy as np
     wm = np.asarray(state.watermark, np.int64)
     assert wm.ndim == 2, "shard_slots_used wants a sharded state [S, P]"
     live = wm - np.asarray(state.free_count, np.int64)
@@ -178,6 +183,7 @@ def _insert_one(layout: PoolLayout, tbl, caps, state: PoolState,
                      state.free_list, free_count)
 
 
+@functools.lru_cache(maxsize=None)
 def make_ingest_fn(layout: PoolLayout, vocab_size: int):
     """Build a jitted ``ingest(state, terms, postings, start_pools, valid)``.
 
@@ -185,6 +191,7 @@ def make_ingest_fn(layout: PoolLayout, vocab_size: int):
     occurrence, already positional-encoded via
     :func:`repro.core.postings.pack`).  ``start_pools`` implements the §7
     SP policies (all zeros == ``SP(z_0)``).  ``valid`` masks padding.
+    Memoised on (layout, vocab) so segment rollover reuses the jit cache.
     """
     tbl = layout.tables()
     caps = jnp.asarray(
@@ -214,6 +221,294 @@ def make_ingest_fn(layout: PoolLayout, vocab_size: int):
 
 
 # ---------------------------------------------------------------------------
+# Batch-parallel bulk ingest (the hot-path replacement for the scan).
+# ---------------------------------------------------------------------------
+def _progression_tables(layout: PoolLayout):
+    """Static §3.3 slice-size progression tables for the analytic walk.
+
+    ``h[q]``          postings a FRESH slice in pool q holds (slot 0 of
+                      pools > 0 is the previous-pointer).
+    ``excl[q0, j]``   postings held by the first ``j`` fresh slices of the
+                      progression ``q0, q0+1, ..., P-1, P-1, ...`` —
+                      exclusive prefix sums, one row per starting pool.
+    """
+    P = layout.num_pools
+    sizes = layout.slice_sizes
+    h = np.asarray([sizes[q] - (1 if q > 0 else 0) for q in range(P)],
+                   np.int64)
+    excl = np.zeros((P, P + 1), np.int64)
+    for q0 in range(P):
+        acc = 0
+        for j in range(P):
+            excl[q0, j] = acc
+            acc += h[min(q0 + j, P - 1)]
+        excl[q0, P] = acc
+    return h, excl
+
+
+@functools.lru_cache(maxsize=None)
+def make_bulk_ingest_fn(layout: PoolLayout, vocab_size: int, *,
+                        use_kernel: Optional[bool] = None,
+                        interpret: Optional[bool] = None):
+    """Build a jitted batch-parallel ``ingest`` — same signature and
+    BIT-IDENTICAL ``PoolState`` as :func:`make_ingest_fn`'s scan, but one
+    vectorised dispatch per batch instead of one scan step per posting.
+
+    Pipeline (everything data-parallel over the N occurrences):
+
+      1. stable-sort the (term, posting) stream by term; segment it and
+         rank every occurrence within its term (stream order preserved).
+      2. walk the §3.3 slice-size progression ANALYTICALLY: from each
+         term's current ``tail`` derive, per occurrence, which slice of
+         the batch's new allocations it lands in (closed form over the
+         static progression prefix sums) — no per-posting chain steps.
+      3. allocate batch-wide: per pool, rank allocation events by stream
+         position; the first ``free_count`` successes pop the free list
+         LIFO, the rest bump the watermark, and events ranked past
+         ``free_count + capacity - watermark`` FAIL — the failing term's
+         occurrences are truncated from the failing posting onward and
+         the sticky ``overflow`` bit is set, reproducing the scan's
+         semantics exactly (failure at the same posting index).
+      4. write every posting, previous-pointer, new ``tail``/``freq`` in
+         one fused scatter-append (the ``bulk_append`` Pallas kernel on
+         TPU, its jnp oracle elsewhere — ``use_kernel=None`` auto).
+
+    Constraint (same as every SP policy in the repo): ``start_pools``
+    must be constant per term within a batch — a NEW term's start pool is
+    read from its first occurrence.  The scan path remains the semantics
+    oracle (tests/test_bulk_ingest.py proves leaf-for-leaf equality).
+    """
+    from repro.kernels import ops as kops
+
+    tbl = layout.tables()
+    pb = layout.pool_bits
+    P = layout.num_pools
+    V = vocab_size
+    H = layout.total_slots
+    caps = jnp.asarray(layout.slices_per_pool, jnp.int32)
+    h_np, excl_np = _progression_tables(layout)
+    h_tbl = jnp.asarray(h_np, jnp.int32)
+    excl_tbl = jnp.asarray(excl_np, jnp.int32)
+    hL = int(h_np[P - 1])
+    BIG = jnp.int32(np.iinfo(np.int32).max)
+
+    def _plan(state: PoolState, terms, postings, start_pools, valid):
+        """Turn one batch into scatter operands + the new small leaves."""
+        N = terms.shape[0]
+        i_idx = jnp.arange(N, dtype=jnp.int32)
+        # -- 1. sort by term (stable: stream order survives per term) ---
+        key = jnp.where(valid, terms, jnp.uint32(V))  # invalid sort last
+        idx_bits = max((N - 1).bit_length(), 1)
+        if V.bit_length() + idx_bits <= 32:
+            # pack (term, stream index) into ONE uint32 key: a plain
+            # single-array sort is several times faster than the
+            # variadic stable argsort and the index IS the tiebreak
+            packed = (key << jnp.uint32(idx_bits)) | i_idx.astype(
+                jnp.uint32)
+            skey = jnp.sort(packed)
+            order = (skey
+                     & jnp.uint32((1 << idx_bits) - 1)).astype(jnp.int32)
+            t_s = skey >> jnp.uint32(idx_bits)
+        else:
+            order = jnp.argsort(key, stable=True)
+            t_s = key[order]
+        post_s = postings[order]
+        sp_s = start_pools[order]
+        valid_s = valid[order]
+        stream = order                                # original position
+        head = jnp.where(i_idx == 0, True, t_s != jnp.roll(t_s, 1))
+        seg_id = jnp.cumsum(head.astype(jnp.int32)) - 1
+        seg_start = jax.lax.cummax(jnp.where(head, i_idx, 0))
+        r = i_idx - seg_start                         # rank within term
+
+        # -- 2. analytic demand walk from each term's current tail ------
+        tail_t = state.tail[jnp.minimum(t_s, jnp.uint32(V - 1))]
+        new = ptr_mod.is_null(tail_t)
+        cp, sl0, off0 = ptr_mod.decode(tbl, pb, tail_t)
+        cap0 = tbl["slice_size"][cp].astype(jnp.int32)
+        rem0 = jnp.where(new, 0, cap0 - 1 - off0.astype(jnp.int32))
+        sp_first = jnp.minimum(sp_s[seg_start].astype(jnp.int32), P - 1)
+        q0 = jnp.where(new, sp_first,
+                       jnp.minimum(cp.astype(jnp.int32) + 1, P - 1))
+        ra = r - rem0                  # occurrence's rank past the tail
+        needs = ra >= 0                # lands in a batch-fresh slice
+        exq = excl_tbl[q0]                                   # [N, P+1]
+        j_small = jnp.sum(exq[:, 1:] <= ra[:, None], axis=1)
+        beyond = ra >= exq[:, P]
+        j = jnp.where(beyond, P + (jnp.maximum(ra - exq[:, P], 0)) // hL,
+                      j_small).astype(jnp.int32)
+        excl_at_j = jnp.where(
+            beyond, exq[:, P] + (j - P) * hL,
+            jnp.take_along_axis(exq, jnp.clip(j, 0, P)[:, None],
+                                axis=1)[:, 0])
+        off_in = ra - excl_at_j        # posting's rank inside slice j
+        pool_j = jnp.minimum(q0 + jnp.minimum(j, P), P - 1)
+        is_event = valid_s & needs & (off_in == 0)   # slice-j allocation
+
+        # -- 3. batch-wide allocation, pool by pool in stream order -----
+        # Ranks are computed in ORIGINAL stream order, where "position of
+        # this allocation among the pool's allocations" is an exclusive
+        # cumsum — no per-pool sort.  One scatter inverts the term sort.
+        wm = state.watermark.astype(jnp.int32)
+        fc = state.free_count.astype(jnp.int32)
+        fb = tbl["free_base"]
+        total_slices = state.free_list.shape[0]
+        inv = jnp.zeros((N,), jnp.int32).at[stream].set(
+            i_idx, mode="promise_in_bounds", unique_indices=True)
+        ev_o = is_event[inv]
+        pool_o = jnp.where(ev_o, pool_j[inv], P)     # P == no event
+        avail = fc + caps - wm                       # int32[P]
+
+        def _assign(k, pool, ok):
+            """Slice id for the pool's ``k``-th allocation: free-list
+            LIFO pop first, then watermark bump."""
+            pop_idx = jnp.clip(fb[pool] + fc[pool] - 1 - k, 0,
+                               total_slices - 1)
+            return jnp.where(ok & (k < fc[pool]),
+                             state.free_list[pop_idx],
+                             jnp.where(ok, wm[pool] + k - fc[pool], 0))
+
+        # fast path: assume nothing fails — every pool's ranks come from
+        # ONE [P, N] cumsum with no cross-pool dependency.  Sound: if no
+        # event exceeds its pool's capacity under the no-truncation
+        # demand, no truncation happens and the assignment is exact.
+        m_all = pool_o[None, :] == jnp.arange(P, dtype=jnp.int32)[:, None]
+        ranks = (jnp.cumsum(m_all.astype(jnp.int32), axis=1)
+                 - m_all.astype(jnp.int32))                    # [P, N]
+        any_fail = jnp.any(m_all & (ranks >= avail[:, None]))
+
+        def _fast(_):
+            k = jnp.take_along_axis(
+                ranks, jnp.minimum(pool_o, P - 1)[None, :], axis=0)[0]
+            slice_o = _assign(k, jnp.minimum(pool_o, P - 1), ev_o)
+            n_succ = jnp.sum(m_all.astype(jnp.int32), axis=1)  # [P]
+            return (slice_o, jnp.zeros((N,), bool),
+                    wm + jnp.maximum(n_succ - fc, 0),
+                    fc - jnp.minimum(n_succ, fc))
+
+        def _slow(_):
+            """Exact overflow semantics: pools resolve in increasing
+            order; a failed slice truncates its term from that posting
+            onward (sticky overflow at the same posting index)."""
+            seg_o = seg_id[inv]
+            failed_o = jnp.zeros((N,), bool)
+            slice_acc = jnp.zeros((N,), jnp.int32)
+            new_wm, new_fc = wm, fc
+            for p in range(P):         # static, small; lower pools first
+                m = (pool_o == p) & ~failed_o
+                k = jnp.cumsum(m.astype(jnp.int32)) - m.astype(jnp.int32)
+                succ = m & (k < avail[p])
+                fail = m & ~succ
+                slice_acc = jnp.where(succ, _assign(k, pool_o, succ),
+                                      slice_acc)
+                n_succ = jnp.sum(succ.astype(jnp.int32))
+                new_wm = new_wm.at[p].add(jnp.maximum(n_succ - fc[p], 0))
+                new_fc = new_fc.at[p].add(-jnp.minimum(n_succ, fc[p]))
+                fp = jax.ops.segment_min(
+                    jnp.where(fail, i_idx, BIG), seg_o, num_segments=N)
+                failed_o = failed_o | (i_idx >= fp[seg_o])
+            return slice_acc, failed_o, new_wm, new_fc
+
+        evt_slice_o, failed_o, new_wm, new_fc = jax.lax.cond(
+            any_fail, _slow, _fast, None)
+
+        evt_slice = evt_slice_o[stream]     # back to term-sorted order
+        failed_s = failed_o[stream]
+        # an event succeeded iff its own posting wasn't truncated
+        evt_ok = is_event & ~failed_s
+        land = valid_s & ~failed_s
+
+        # -- 4. scatter operands ----------------------------------------
+        # every occurrence's slice: its slice-j event sits off_in rows up
+        evt_pos = jnp.clip(i_idx - off_in, 0, jnp.maximum(N - 1, 0))
+        slice_occ = jnp.where(needs, evt_slice[evt_pos],
+                              sl0.astype(jnp.int32))
+        pool_occ = jnp.where(needs, pool_j, cp.astype(jnp.int32))
+        off_occ = jnp.where(needs, off_in + (pool_j > 0),
+                            off0.astype(jnp.int32) + 1 + r)
+        addr = ptr_mod.to_addr(tbl, pool_occ.astype(jnp.uint32),
+                               slice_occ.astype(jnp.uint32),
+                               off_occ.astype(jnp.uint32)).astype(jnp.int32)
+        # skip rows get DISTINCT out-of-range addresses (H + row) so the
+        # scatters can honestly promise unique indices — XLA applies the
+        # surviving writes without the duplicate-resolution slow path
+        post_addr = jnp.where(land, addr, H + i_idx)
+        post_val = post_s
+
+        # previous-pointer writes: slot 0 of fresh slices in pools > 0
+        pool_prev = jnp.minimum(q0 + jnp.maximum(j - 1, 0), P - 1)
+        prev_evt = jnp.clip(i_idx - h_tbl[pool_prev], 0,
+                            jnp.maximum(N - 1, 0))
+        prev_ptr = ptr_mod.encode(
+            tbl, pb, pool_prev.astype(jnp.uint32),
+            evt_slice[prev_evt].astype(jnp.uint32),
+            tbl["slice_size"][pool_prev] - jnp.uint32(1))
+        # the first fresh slice links back to the pre-batch chain: by the
+        # time that alloc fires, the old tail slice is FULL, so the prev
+        # pointer is its last slot (== tail_t when it was already full)
+        old_full = ptr_mod.encode(tbl, pb, cp, sl0,
+                                  tbl["slice_size"][cp] - jnp.uint32(1))
+        ptr_val = jnp.where(j == 0,
+                            jnp.where(new, jnp.uint32(NULL), old_full),
+                            prev_ptr)
+        ptr_write = evt_ok & (pool_j > 0)
+        ptr_addr = jnp.where(
+            ptr_write,
+            ptr_mod.to_addr(tbl, pool_j.astype(jnp.uint32),
+                            jnp.maximum(evt_slice, 0).astype(jnp.uint32),
+                            jnp.uint32(0)).astype(jnp.int32),
+            H + i_idx)
+
+        # per-term tail/freq: landed occurrences are a stream prefix, so
+        # the new tail is the (seg_start + n_land - 1)-th occurrence.
+        # n_land per term via cumsum over the sorted order (cheaper than
+        # a segment reduction): count in [seg_start, seg_end].
+        is_last = jnp.where(i_idx == N - 1, True, jnp.roll(head, -1))
+        seg_end = jax.lax.cummin(
+            jnp.where(is_last, i_idx, BIG), reverse=True)
+        c = jnp.cumsum(land.astype(jnp.int32))
+        n_land = (c[seg_end] - c[seg_start]
+                  + land[seg_start].astype(jnp.int32))
+        last = jnp.clip(seg_start + n_land - 1, 0, jnp.maximum(N - 1, 0))
+        new_tail = ptr_mod.encode(tbl, pb,
+                                  pool_occ[last].astype(jnp.uint32),
+                                  slice_occ[last].astype(jnp.uint32),
+                                  off_occ[last].astype(jnp.uint32))
+        write_term = head & valid_s & (n_land > 0)
+        term_idx = jnp.where(write_term, t_s.astype(jnp.int32), V + i_idx)
+        term_freq = state.freq[jnp.minimum(t_s, jnp.uint32(V - 1))] + n_land
+        overflow = state.overflow | any_fail
+        return ((post_addr, post_val, ptr_addr, ptr_val,
+                 term_idx, new_tail, term_freq),
+                new_wm.astype(jnp.int32), new_fc.astype(jnp.int32),
+                overflow)
+
+    # the input state is DONATED: heap/tail/freq update in place (the
+    # zero-copy invariant, now end-to-end).  Callers must rebind —
+    # ``state = ingest(state, ...)`` — and never touch the old reference
+    # afterwards; every engine in the repo already does exactly that.
+    # The scan path never donates (it is the comparison oracle).
+    @functools.partial(jax.jit, donate_argnums=0)
+    def ingest(state: PoolState, terms, postings,
+               start_pools=None, valid=None) -> PoolState:
+        n = terms.shape[0]
+        if start_pools is None:
+            start_pools = jnp.zeros((n,), jnp.uint32)
+        if valid is None:
+            valid = jnp.ones((n,), bool)
+        scat, wm, fc, overflow = _plan(
+            state, terms.astype(jnp.uint32), postings.astype(jnp.uint32),
+            start_pools.astype(jnp.uint32), valid)
+        heap, tail, freq = kops.bulk_append(
+            state.heap, state.tail, state.freq, *scat,
+            use_kernel=use_kernel, interpret=interpret)
+        return PoolState(heap, wm, tail, freq, overflow,
+                         state.free_list, fc)
+
+    return ingest
+
+
+# ---------------------------------------------------------------------------
 # Slice reclamation (segment rollover -> free list).
 # ---------------------------------------------------------------------------
 def release_slices(layout: PoolLayout, state: PoolState, freed,
@@ -231,7 +526,6 @@ def release_slices(layout: PoolLayout, state: PoolState, freed,
     Rollover is off the ingest hot path (exactly like the freeze walk),
     so this runs in numpy and re-uploads the small non-heap leaves.
     """
-    import numpy as np
     wm = np.asarray(state.watermark)
     sharded = wm.ndim == 2
     fl = np.asarray(state.free_list).copy()

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref
+from repro.kernels.bulk_append import bulk_append as _bulk_append
 from repro.kernels.embedding_bag import embedding_bag as _embedding_bag
 from repro.kernels.paged_attention import PAGE
 from repro.kernels.paged_attention import paged_attention as _paged_attention
@@ -52,5 +53,27 @@ def segment_intersect_mask(a, b, *, interpret=None):
     return _segment_intersect_mask(a, b, interpret=interpret)
 
 
+def bulk_append(heap, tail, freq, post_addr, post_val, ptr_addr, ptr_val,
+                term_idx, term_tail, term_freq, *, use_kernel=None,
+                interpret=None):
+    """Fused scatter-append of one ingest batch into (heap, tail, freq).
+
+    ``use_kernel=None`` auto-routes: the Pallas kernel on a real TPU
+    backend, the jnp oracle everywhere else (the ingest hot path must not
+    pay the interpreter's per-element DMA simulation on CPU; the oracle
+    IS the semantics — see ref.bulk_append_ref)."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return ref.bulk_append_ref(heap, tail, freq, post_addr, post_val,
+                                   ptr_addr, ptr_val, term_idx, term_tail,
+                                   term_freq)
+    if interpret is None:
+        interpret = _default_interpret()
+    return _bulk_append(heap, tail, freq, post_addr, post_val, ptr_addr,
+                        ptr_val, term_idx, term_tail, term_freq,
+                        interpret=interpret)
+
+
 __all__ = ["paged_attention", "embedding_bag", "intersect_mask",
-           "segment_intersect_mask", "ref", "PAGE"]
+           "segment_intersect_mask", "bulk_append", "ref", "PAGE"]

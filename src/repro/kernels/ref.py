@@ -56,6 +56,25 @@ def intersect_mask_ref(a, b, invalid: int = 0xFFFFFFFF):
     return hit.astype(jnp.int32)
 
 
+def bulk_append_ref(heap, tail, freq, post_addr, post_val, ptr_addr,
+                    ptr_val, term_idx, term_tail, term_freq):
+    """Oracle for the fused scatter-append kernel: four plain ``drop``
+    scatters.  Skips are DISTINCT out-of-range addresses (``>= len(
+    target)``), and live posting/pointer/term slots are disjoint by
+    construction (the bulk allocator owns each fresh slice exclusively
+    within a batch), so every scatter honestly promises unique indices
+    and the write order between the two heap scatters is immaterial."""
+    heap = heap.at[post_addr].set(post_val.astype(heap.dtype), mode="drop",
+                                  unique_indices=True)
+    heap = heap.at[ptr_addr].set(ptr_val.astype(heap.dtype), mode="drop",
+                                 unique_indices=True)
+    tail = tail.at[term_idx].set(term_tail.astype(tail.dtype), mode="drop",
+                                 unique_indices=True)
+    freq = freq.at[term_idx].set(term_freq.astype(freq.dtype), mode="drop",
+                                 unique_indices=True)
+    return heap, tail, freq
+
+
 def segment_intersect_mask_ref(a_packed, b_packed):
     """Oracle for the fused segment kernel: decode both PackedLists with
     the all-blocks jnp decoder, then plain membership."""

@@ -1,0 +1,206 @@
+"""Bulk-vs-scan allocator equivalence: the batch-parallel bulk ingest
+must produce a ``PoolState`` BIT-IDENTICAL to the per-posting scan over
+any stream — the scan is the semantics oracle (paper §3.2/§3.3), the
+bulk path is the hot-path replacement.
+
+Covered: random multi-batch streams, EMPTY batches, a single hot term
+spanning many slices, pool-cap overflow (sticky ``overflow`` at the same
+posting index), SP start pools, and recycled free-list slices after a
+rollover.  The fused Pallas ``bulk_append`` kernel (interpret mode) is
+checked against its jnp oracle on the same operands.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import segments, slicepool
+from repro.core.pointers import PoolLayout
+
+# small, overflow-prone configs; a fixed set keeps the jit cache warm
+# (make_*_ingest_fn is memoised per layout/vocab)
+LAYOUTS = (
+    PoolLayout(z=(1, 4), slices_per_pool=(2, 1)),
+    PoolLayout(z=(1, 4), slices_per_pool=(8, 3)),
+    PoolLayout(z=(0, 2, 5), slices_per_pool=(16, 6, 2)),
+    PoolLayout(z=(1, 4, 7, 11), slices_per_pool=(64, 32, 16, 8)),
+    PoolLayout(z=(3,), slices_per_pool=(12,)),
+)
+# a fixed menu of batch lengths bounds the number of compiled shapes
+BATCH_LENS = (0, 1, 7, 23, 60)
+
+
+def assert_states_equal(s1, s2, ctx=""):
+    for name, a, b in zip(s1._fields, s1, s2):
+        a, b = np.asarray(a), np.asarray(b)
+        assert np.array_equal(a, b), (
+            f"{ctx}: PoolState.{name} diverged "
+            f"(scan vs bulk): {a.tolist() if a.size < 50 else a} != "
+            f"{b.tolist() if b.size < 50 else b}")
+
+
+def run_both(layout, vocab, batches, start_pools_per_term=None,
+             release_every=None):
+    """Feed identical batches to scan and bulk allocators; compare the
+    full state after EVERY batch (and after every rollover release)."""
+    scan = slicepool.make_ingest_fn(layout, vocab)
+    bulk = slicepool.make_bulk_ingest_fn(layout, vocab)
+    s1 = slicepool.init_state(layout, vocab)
+    s2 = slicepool.init_state(layout, vocab)
+    for bi, (terms, posts) in enumerate(batches):
+        sp = None
+        if start_pools_per_term is not None:
+            sp = jnp.asarray(
+                np.asarray(start_pools_per_term, np.uint32)[terms])
+        s1 = scan(s1, jnp.asarray(terms), jnp.asarray(posts), sp)
+        s2 = bulk(s2, jnp.asarray(terms), jnp.asarray(posts), sp)
+        assert_states_equal(s1, s2, f"batch {bi}")
+        if (release_every and (bi + 1) % release_every == 0
+                and not bool(s1.overflow)):
+            fz = segments.freeze_state(
+                layout, np.asarray(s1.heap), np.asarray(s1.tail),
+                np.asarray(s1.freq), n_docs=1)
+            s1 = slicepool.release_slices(layout, s1, fz.freed_slices)
+            s2 = slicepool.release_slices(layout, s2, fz.freed_slices)
+            assert_states_equal(s1, s2, f"release after batch {bi}")
+    return s1, s2
+
+
+@st.composite
+def stream(draw):
+    li = draw(st.integers(0, len(LAYOUTS) - 1))
+    layout = LAYOUTS[li]
+    vocab = draw(st.sampled_from([1, 2, 5, 9]))
+    n_batches = draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    lens = [draw(st.sampled_from(BATCH_LENS)) for _ in range(n_batches)]
+    use_sp = draw(st.sampled_from([False, True]))
+    return li, vocab, tuple(lens), seed, use_sp
+
+
+@given(stream())
+@settings(max_examples=25, deadline=None)
+def test_bulk_matches_scan_bit_exactly(s):
+    """Random streams incl. empty batches and pool-cap overflow: every
+    PoolState leaf identical after every batch."""
+    li, vocab, lens, seed, use_sp = s
+    layout = LAYOUTS[li]
+    rng = np.random.default_rng(seed)
+    sp = (rng.integers(0, layout.num_pools, vocab)
+          if use_sp else None)
+    pos = 0
+    batches = []
+    for n in lens:
+        terms = rng.integers(0, vocab, n).astype(np.uint32)
+        posts = (pos + np.arange(n)).astype(np.uint32)
+        pos += n
+        batches.append((terms, posts))
+    run_both(layout, vocab, batches, start_pools_per_term=sp)
+
+
+def test_empty_batch_is_noop():
+    layout = LAYOUTS[3]
+    empty = (np.zeros(0, np.uint32), np.zeros(0, np.uint32))
+    some = (np.arange(4, dtype=np.uint32), np.arange(4, dtype=np.uint32))
+    s1, s2 = run_both(layout, 4, [empty, some, empty])
+    assert int(np.asarray(s1.freq).sum()) == 4
+
+
+def test_hot_term_spans_many_slices_one_batch():
+    """One term, one batch, enough postings to walk pools 0..3 and wrap
+    around the last pool several times."""
+    layout = LAYOUTS[3]
+    n = 500
+    s1, s2 = run_both(
+        layout, 3, [(np.zeros(n, np.uint32),
+                     np.arange(n, dtype=np.uint32))])
+    assert not bool(s1.overflow)
+    assert int(s1.freq[0]) == n
+
+
+def test_overflow_same_posting_index_and_sticky():
+    """Exhaustion must hit at the SAME posting in both paths (freq equal)
+    and the sticky bit must survive later successful batches."""
+    layout = LAYOUTS[0]           # 2 + 15 postings fit for one term
+    b1 = (np.zeros(18, np.uint32), np.arange(18, dtype=np.uint32))
+    b2 = (np.ones(2, np.uint32), np.arange(100, 102, dtype=np.uint32))
+    s1, s2 = run_both(layout, 2, [b1, b2])
+    assert bool(s1.overflow) and bool(s2.overflow)
+    assert int(s2.freq[0]) == 17  # 18th posting dropped in both
+    assert int(s2.freq[1]) == 2   # later term still lands, bit stays set
+
+
+def test_overflow_mid_batch_truncates_per_term():
+    """Several terms overflow inside ONE batch: each term keeps exactly
+    the prefix the scan kept."""
+    layout = LAYOUTS[1]           # pool1 has 3 slices only
+    rng = np.random.default_rng(7)
+    terms = rng.integers(0, 5, 120).astype(np.uint32)
+    posts = np.arange(120, dtype=np.uint32)
+    s1, s2 = run_both(layout, 5, [(terms, posts)])
+    assert bool(s1.overflow)
+
+
+def test_recycled_free_list_slices_after_rollover():
+    """Rollover releases slices; the next batches must pop them LIFO in
+    the same order as the scan (watermark stays put)."""
+    layout = LAYOUTS[2]
+    rng = np.random.default_rng(3)
+    batches = []
+    pos = 0
+    for n in (23, 23, 23, 23):
+        batches.append((rng.integers(0, 5, n).astype(np.uint32),
+                        (pos + np.arange(n)).astype(np.uint32)))
+        pos += n
+    s1, s2 = run_both(layout, 5, batches, release_every=2)
+
+
+def test_bulk_wide_vocab_argsort_fallback():
+    """A vocab too wide to pack (term, index) into one uint32 sort key
+    must fall back to the stable argsort and stay bit-exact."""
+    layout = LAYOUTS[3]
+    vocab = 1 << 24                    # 25 key bits + >=8 index bits > 32
+    rng = np.random.default_rng(13)
+    terms = rng.integers(0, vocab, 300).astype(np.uint32)
+    posts = np.arange(300, dtype=np.uint32)
+    # duplicate a few hot terms so slices actually chain
+    terms[::7] = terms[0]
+    run_both(layout, vocab, [(terms[:150], posts[:150]),
+                             (terms[150:], posts[150:])])
+
+
+def test_bulk_kernel_path_matches_scan():
+    """The fused Pallas scatter-append kernel (interpret mode) must also
+    reproduce the scan state exactly."""
+    layout = LAYOUTS[3]
+    vocab = 6
+    scan = slicepool.make_ingest_fn(layout, vocab)
+    bulk = slicepool.make_bulk_ingest_fn(layout, vocab, use_kernel=True,
+                                         interpret=True)
+    s1 = slicepool.init_state(layout, vocab)
+    s2 = slicepool.init_state(layout, vocab)
+    rng = np.random.default_rng(11)
+    for _ in range(3):
+        terms = rng.integers(0, vocab, 40).astype(np.uint32)
+        posts = rng.integers(0, 1000, 40).astype(np.uint32)
+        s1 = scan(s1, jnp.asarray(terms), jnp.asarray(posts))
+        s2 = bulk(s2, jnp.asarray(terms), jnp.asarray(posts))
+    assert_states_equal(s1, s2, "kernel path")
+
+
+def test_bulk_materializes_identically(small_layout):
+    """End-to-end: postings ingested in bulk read back newest-first,
+    exactly like the scan-built chains (same heap, same walk)."""
+    vocab = 16
+    rng = np.random.default_rng(5)
+    terms = rng.integers(0, vocab, 300).astype(np.uint32)
+    posts = np.arange(300, dtype=np.uint32)
+    bulk = slicepool.make_bulk_ingest_fn(small_layout, vocab)
+    state = slicepool.init_state(small_layout, vocab)
+    state = bulk(state, jnp.asarray(terms), jnp.asarray(posts))
+    mat = slicepool.make_materializer(small_layout, 8, 128)
+    for t in range(vocab):
+        vals, n = mat(state, jnp.uint32(t))
+        exp = posts[terms == t][::-1]
+        assert int(n) == len(exp)
+        assert np.array_equal(np.asarray(vals)[: int(n)], exp)

@@ -123,6 +123,43 @@ def test_union_property(a, b):
     assert got == sorted(set(a) | set(b))
 
 
+def test_union_wider_than_one_input_not_truncated():
+    """Regression: union_asc used to clip its result to ``|a|`` — two
+    nearly-full disjoint lists lost half their union.  The output is now
+    sized to hold both inputs."""
+    a = list(range(0, 60))           # 60 of 64 slots used
+    b = list(range(100, 160))        # disjoint: |A ∪ B| = 120 > 64
+    A, na = _pad_asc(a, 64)
+    B, nb = _pad_asc(b, 64)
+    out, n = query.union_asc(A, na, B, nb)
+    assert out.shape[0] == 128       # sized for |a| + |b|
+    assert int(n) == 120
+    assert np.asarray(out)[: int(n)].tolist() == sorted(set(a) | set(b))
+
+
+def test_disjunctive_union_larger_than_max_len(small_layout):
+    """Regression through the engine: a disjunction whose result
+    outgrows the PER-TERM list width must keep every docid.  Build two
+    terms with disjoint doc sets so |A ∪ B| = 2 * max_len."""
+    from repro.core import slicepool
+    from repro.core import postings as post
+    vocab = 4
+    max_len = 8
+    docs_a = np.arange(0, 8)         # term 0 in docs 0..7
+    docs_b = np.arange(8, 16)        # term 1 in docs 8..15
+    terms = np.concatenate([np.zeros(8), np.ones(8)]).astype(np.uint32)
+    plist = post.pack(jnp.asarray(np.concatenate([docs_a, docs_b]),
+                                  jnp.uint32), jnp.uint32(0))
+    ingest = slicepool.make_bulk_ingest_fn(small_layout, vocab)
+    state = slicepool.init_state(small_layout, vocab)
+    state = ingest(state, jnp.asarray(terms), plist)
+    eng = query.make_engine(small_layout, max_slices=4, max_len=max_len)
+    q = jnp.asarray([0, 1] + [0] * 6, jnp.uint32)
+    ids, n = eng.disjunctive(state, q, jnp.int32(2))
+    assert int(n) == 16, "union result was truncated to max_len"
+    assert np.asarray(ids)[: int(n)].tolist() == list(range(15, -1, -1))
+
+
 @given(sets)
 @settings(max_examples=50, deadline=None)
 def test_asc_desc_inverse(a):

@@ -285,3 +285,96 @@ def test_lifecycle_rollover_matches_never_frozen():
     high-water mark stays below the never-frozen index's footprint."""
     res = _run_subprocess(SCRIPT_LIFECYCLE)
     assert res["n_queries"] == 24
+
+
+# ---------------------------------------------------------------------------
+# Bulk-vs-scan ingest equivalence through the full lifecycle
+# ---------------------------------------------------------------------------
+SCRIPT_BULK = textwrap.dedent("""
+    from repro.dist import collectives as C
+    C.force_host_device_count(4)
+    import json
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import analytical
+    from repro.core.lifecycle import (LifecycleEngine,
+                                      ShardedLifecycleEngine)
+    from repro.core.pointers import PoolLayout
+    from repro.core.sharded_index import make_doc_mesh
+    from repro.data import synth
+
+    Z = (1, 4, 7, 11)
+    layout = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 512, 64))
+    spec = synth.CorpusSpec(vocab=600, n_docs=500, seed=29)
+    docs = synth.zipf_corpus(spec)
+    freqs = synth.term_freqs(docs, spec.vocab)
+    fmax = int(freqs.max())
+    max_slices = int(analytical.slices_needed(Z, fmax)) + 1
+    max_len = 1 << (fmax - 1).bit_length()
+
+    # 200-doc segments over a 500-doc stream -> rollovers at 200 and 400
+    # (>= 2), with the second one recycling the first's freed slices.
+    mesh, rules = make_doc_mesh(4)
+    def build(bulk):
+        return {
+            "single": LifecycleEngine(
+                layout, spec.vocab, 200, max_slices=max_slices,
+                max_len=max_len, bulk_ingest=bulk),
+            "sharded": ShardedLifecycleEngine(
+                layout, spec.vocab, 200, mesh, max_slices=max_slices,
+                max_len=max_len, rules=rules, bulk_ingest=bulk),
+        }
+    bulks, scans = build(True), build(False)
+
+    out = {"n_states": 0, "n_queries": 0}
+    for i in range(0, 500, 20):
+        batch = docs[i:i + 20]
+        for name in bulks:
+            bulks[name].ingest(batch)
+            scans[name].ingest(batch)
+    top = np.argsort(-freqs)
+    for name in bulks:
+        b, s = bulks[name], scans[name]
+        assert b.stats.rollovers == 2, (name, b.stats)
+        assert s.stats.rollovers == 2, (name, s.stats)
+        # the ACTIVE PoolState must be bit-identical leaf for leaf
+        for leaf, x, y in zip(b.segments.active.state._fields,
+                              b.segments.active.state,
+                              s.segments.active.state):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), \\
+                (name, leaf)
+            out["n_states"] += 1
+        # every frozen segment's CSR store must match exactly
+        for fb, fs in zip(b.segments.frozen, s.segments.frozen):
+            if hasattr(fb, "shards"):
+                pairs = list(zip(fb.shards, fs.shards))
+            else:
+                pairs = [(fb, fs)]
+            for xb, xs in pairs:
+                assert np.array_equal(xb.offsets, xs.offsets), name
+                assert np.array_equal(xb.data, xs.data), name
+        # and unified queries agree bit for bit
+        for a_i, b_i in [(0, 1), (2, 5), (1, 20)]:
+            ts = [int(top[a_i]), int(top[b_i])]
+            for kind in ("conjunctive", "disjunctive"):
+                got = getattr(b, kind)(ts).tolist()
+                want = getattr(s, kind)(ts).tolist()
+                assert got == want, (name, kind, ts)
+                out["n_queries"] += 1
+        assert (b.phrase(int(top[0]), int(top[1])).tolist()
+                == s.phrase(int(top[0]), int(top[1])).tolist()), name
+        out["n_queries"] += 1
+    print(json.dumps(out))
+""")
+
+
+def test_bulk_ingest_lifecycle_matches_scan():
+    """Lifecycle engines (single-device AND 4-shard) fed the same stream
+    through >= 2 rollovers must be bit-identical whether built by the
+    batch-parallel bulk allocator or the per-posting scan oracle: every
+    active PoolState leaf, every frozen CSR segment, and every unified
+    query result."""
+    res = _run_subprocess(SCRIPT_BULK)
+    assert res["n_states"] == 14  # 7 leaves x 2 deployments
+    assert res["n_queries"] == 14
