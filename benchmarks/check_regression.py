@@ -1,0 +1,106 @@
+"""CI perf-regression guard: compare a fresh ``BENCH_ci.json`` against
+the newest checked-in ``BENCH_pr*.json`` baseline and FAIL (exit 1) when
+a guarded metric regresses by more than the threshold (default 30% —
+generous enough for shared-runner noise, tight enough to catch a
+hot-path going through a slow fallback).
+
+    PYTHONPATH=src python -m benchmarks.check_regression BENCH_ci.json \
+        [--baseline-dir .] [--threshold 0.30]
+
+Guarded metrics (skipped with a note when either side lacks one, so the
+guard never blocks adding/removing suites):
+
+  * bulk-ingest docs/s        (ingest.bulk_docs_s, higher is better)
+  * bulk-vs-scan speedup      (ingest.bulk_vs_scan_speedup, higher)
+  * batched query latency     (query.batched_ms_per_q_q128, lower;
+    the qps metric is its reciprocal, so one guard covers both)
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+# (suite, metric key, direction) — direction "higher" means a DROP is a
+# regression; "lower" means a RISE is.  batched_qps_q128 is the exact
+# reciprocal of the latency metric, so only the latency is guarded
+# (guarding both would just be the same measurement at two thresholds).
+GUARDS = (
+    ("ingest", "bulk_docs_s", "higher"),
+    ("ingest", "bulk_vs_scan_speedup", "higher"),
+    ("query", "batched_ms_per_q_q128", "lower"),
+)
+
+
+def newest_baseline(baseline_dir: str):
+    """The checked-in ``BENCH_pr<N>.json`` with the highest N."""
+    best, best_n = None, -1
+    for path in glob.glob(os.path.join(baseline_dir, "BENCH_pr*.json")):
+        m = re.fullmatch(r"BENCH_pr(\d+)\.json", os.path.basename(path))
+        if m and int(m.group(1)) > best_n:
+            best, best_n = path, int(m.group(1))
+    return best
+
+
+def metric(report: dict, suite: str, key: str):
+    s = report.get("suites", {}).get(suite)
+    if not s or not s.get("ok") or not isinstance(s.get("metrics"), dict):
+        return None
+    v = s["metrics"].get(key)
+    return float(v) if isinstance(v, (int, float)) else None
+
+
+def compare(current: dict, baseline: dict, threshold: float):
+    failures, lines = [], []
+    for suite, key, direction in GUARDS:
+        cur = metric(current, suite, key)
+        base = metric(baseline, suite, key)
+        name = f"{suite}.{key}"
+        if cur is None or base is None or base == 0:
+            lines.append(f"  skip {name}: missing on "
+                         f"{'current' if cur is None else 'baseline'} side")
+            continue
+        change = (cur - base) / base
+        regress = -change if direction == "higher" else change
+        status = "FAIL" if regress > threshold else "ok"
+        lines.append(f"  {status:4s} {name}: {base:.3f} -> {cur:.3f} "
+                     f"({change * 100:+.1f}%, {direction} is better)")
+        if regress > threshold:
+            failures.append(name)
+    return failures, lines
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh benchmark JSON (BENCH_ci.json)")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding checked-in BENCH_pr*.json")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max tolerated fractional regression")
+    args = ap.parse_args(argv)
+
+    base_path = newest_baseline(args.baseline_dir)
+    if base_path is None:
+        print(f"no BENCH_pr*.json baseline in {args.baseline_dir}; "
+              f"nothing to guard")
+        return
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(base_path) as f:
+        baseline = json.load(f)
+
+    failures, lines = compare(current, baseline, args.threshold)
+    print(f"== perf regression guard vs {os.path.basename(base_path)} "
+          f"(threshold {args.threshold * 100:.0f}%) ==")
+    print("\n".join(lines))
+    if failures:
+        print(f"REGRESSED: {failures}")
+        sys.exit(1)
+    print("no regressions")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,7 @@ import traceback
 
 
 SUITES = ("analytical", "fig2", "fig3", "table1", "table2", "ingest",
-          "sharded", "lifecycle", "paged_kv", "roofline")
+          "sharded", "lifecycle", "query", "paged_kv", "roofline")
 
 
 def _jsonable(x):

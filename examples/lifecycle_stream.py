@@ -67,9 +67,28 @@ top = np.argsort(-freqs)
 t1, t2 = int(top[0]), int(top[1])
 hits = life.conjunctive([t1, t2], limit=15)
 print(f"conjunctive [{t1} AND {t2}]: {len(hits)} newest hits "
-      f"(reverse-chronological, segments merged): {hits.tolist()}")
+      f"(reverse-chronological, segments merged, early-exit at limit): "
+      f"{hits.tolist()}")
 hits = life.phrase(t1, t2, limit=10)
 print(f"phrase [{t1} {t2}]: {hits.tolist()}")
+
+# --- batched queries: a whole front-end batch in O(1) dispatches ------
+queries = [[int(top[a]), int(top[b])]
+           for a, b in [(0, 1), (2, 5), (1, 20), (3, 7)]] * 8
+life.conjunctive_batch(queries)                 # warm the jitted stack
+t0 = time.perf_counter()
+results = life.conjunctive_batch(queries)
+batched_ms = (time.perf_counter() - t0) / len(queries) * 1e3
+life.batched = False                            # per-query oracle path
+t0 = time.perf_counter()
+for terms in queries:
+    life.conjunctive(terms)
+seq_ms = (time.perf_counter() - t0) / len(queries) * 1e3
+life.batched = True
+print(f"batched qexec: {len(queries)} queries over "
+      f"{seen_rollovers} frozen segments in one stacked dispatch — "
+      f"{batched_ms:.2f} ms/q vs {seq_ms:.2f} ms/q per-query "
+      f"({seq_ms / batched_ms:.1f}x), {sum(len(r) for r in results)} hits")
 
 # --- the memory story ------------------------------------------------
 bound = life.memory_high_water_slots()

@@ -21,16 +21,26 @@ module drives that loop continuously and gives it a UNIFIED query path:
     the global reverse-chronological result: bit-identical to a
     never-frozen index fed the same stream
     (tests/test_spmd_equivalence.py).
+
+Queries route through :mod:`repro.core.qexec` by default
+(``batched=True``): whole query batches evaluate in O(1) jitted
+dispatches over the active pool plus a device-resident stack of ALL
+frozen segments, with early-exit top-k (``topk_conjunctive`` /
+``conjunctive(..., limit=k)``).  The per-query host loop below
+(``batched=False``) is kept as the bit-exactness oracle
+(tests/test_qexec.py).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import postings as post
+from repro.core import qexec
 from repro.core import query as q
 from repro.core import segments as seg_mod
 from repro.core import sharded_index as shx
@@ -99,6 +109,16 @@ class PackedSegment:
             self._post[term] = got
         return got
 
+    def bounds(self, term: int) -> tuple:
+        """O(1) (or O(S) sharded) ``(n_postings, first_gid, last_gid)``
+        GLOBAL docid summary, WITHOUT forcing a pack — the frozen
+        stack's whole-segment-skip substrate (zero postings or disjoint
+        term ranges can never intersect)."""
+        c, f, last = self.seg.docid_bounds(int(term))
+        if not c:
+            return 0, 0, 0
+        return c, f + self.doc_base, last + self.doc_base
+
     def warm(self, terms: Sequence[int]) -> None:
         for t in terms:
             self.packed(t)
@@ -158,6 +178,12 @@ def phrase_packed(pseg: PackedSegment, t1: int, t2: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 # Unified engines: active pool + every frozen segment
 # ---------------------------------------------------------------------------
+# largest conjunctive `limit` routed through the early-exit top-k path;
+# beyond it a limit is a generous cap, and full evaluation + slice is
+# cheaper than a pow2(limit)-wide banking buffer (results identical).
+_TOPK_LIMIT_MAX = 4096
+
+
 @dataclasses.dataclass
 class LifecycleStats:
     docs_ingested: int = 0
@@ -179,9 +205,17 @@ class _LifecycleBase:
     max_query_len: int
     use_kernel: bool
     interpret: Optional[bool]
+    batched: bool
 
-    def _init_shell(self) -> None:
+    def _init_shell(self, batched_kernel: Optional[bool]) -> None:
         self._packed: List[PackedSegment] = []
+        self._qstack: Optional[qexec.FrozenStack] = None
+        # like ops.bulk_append: the batched grid kernel runs on a real
+        # TPU backend; the CPU execution path is the jnp oracle (the
+        # interpreter's per-element DMA simulation is not a hot path).
+        self._batched_kernel = (
+            self.use_kernel and jax.default_backend() == "tpu"
+            if batched_kernel is None else bool(batched_kernel))
         self.stats = LifecycleStats()
 
     # -- ingest ----------------------------------------------------------
@@ -211,7 +245,14 @@ class _LifecycleBase:
                 p = PackedSegment(fz)
                 self.stats.rollovers += 1
             fresh.append(p)
+        if [id(p) for p in fresh] != [id(p) for p in self._packed]:
+            self._qstack = None  # segment set changed: rebuild the stack
         self._packed = fresh
+
+    def _frozen_stack(self) -> Optional[qexec.FrozenStack]:
+        if self._qstack is None and self._packed:
+            self._qstack = qexec.FrozenStack(self._packed)
+        return self._qstack
 
     def check_health(self) -> None:
         self.segments.active.check_health()
@@ -232,7 +273,131 @@ class _LifecycleBase:
         return slicepool.memory_high_water_slots(
             self.layout, self.segments.active.state)
 
-    # -- queries ---------------------------------------------------------
+    # -- queries: batched qexec path (default) ---------------------------
+    def _base_u32(self) -> jnp.ndarray:
+        base = self.doc_base
+        if base + self.segments.active.next_docid >= 0xFFFFFFFF:
+            raise OverflowError(
+                f"doc_base {base} exceeds the uint32 docid space; "
+                f"reshard or reset doc_base")
+        return jnp.uint32(base)
+
+    def _batch_eval(self, kind: str, queries: Sequence,
+                    limit: Optional[int]) -> List[np.ndarray]:
+        """Evaluate a whole query batch in O(1) dispatches: one batched
+        active call, one frozen-stack call — NO per-segment host round
+        trips (the per-query oracle does one ``np.asarray`` per segment
+        per query)."""
+        Q = len(queries)
+        if Q == 0:
+            return []
+        if (kind == "conjunctive" and limit is not None
+                and limit <= _TOPK_LIMIT_MAX):
+            # a conjunctive limit IS a top-k: take the early-exit path.
+            # Huge limits (a generous cap, not a real top-k) fall through
+            # to full evaluation + slice — identical results without
+            # compiling a pow2(limit)-wide banking buffer.
+            return self._batch_topk(queries, limit)
+        base = self._base_u32()
+        stack = self._frozen_stack()
+        if kind == "phrase":
+            Qb = qexec.bucket_pow2(Q)
+            t1 = np.zeros(Qb, np.uint32)
+            t2 = np.zeros(Qb, np.uint32)
+            t1[:Q] = [p[0] for p in queries]
+            t2[:Q] = [p[1] for p in queries]
+            live = jnp.asarray((np.arange(Qb) < Q).astype(np.int32))
+            ad, an = self._active_batch(kind, t1, t2)
+            if stack is None:
+                desc, n = qexec.finalize(ad, an, live, base)
+            else:
+                p1, p2 = stack.gather_postings(t1, t2, n_live=Q)
+                desc, n = qexec.frozen_phrase_merge(
+                    ad, an, p1, p2, jnp.asarray(stack.doc_bases), live,
+                    base)
+        else:
+            terms, n_terms = qexec.pad_query_batch(queries,
+                                                   self.max_query_len)
+            # trim the term axis to the batch's pow2 bucket: a 2-term
+            # batch must not pay for max_query_len slots of decode/fold
+            tb = min(qexec.bucket_pow2(int(n_terms.max()), 1),
+                     self.max_query_len)
+            ad, an = self._active_batch(kind, terms, n_terms, tb)
+            if stack is None:
+                desc, n = qexec.finalize(ad, an, jnp.asarray(n_terms),
+                                         base)
+            else:
+                lists, _ = stack.gather(terms[:, :tb], n_terms)
+                desc, n = qexec.frozen_merge(
+                    ad, an, lists, jnp.asarray(n_terms), base, kind=kind,
+                    nt_slots=tb,
+                    kernel=self._batched_kernel, interpret=self.interpret)
+        D, N = np.asarray(desc), np.asarray(n)  # ONE sync for the batch
+        out = [D[i, : int(N[i])].astype(np.int64) for i in range(Q)]
+        return out if limit is None else [o[:limit] for o in out]
+
+    def _batch_topk(self, queries: Sequence, k: int) -> List[np.ndarray]:
+        Q = len(queries)
+        if Q == 0:
+            return []
+        k = int(k)
+        if k <= 0:
+            return [np.zeros(0, np.int64) for _ in range(Q)]
+        terms, n_terms = qexec.pad_query_batch(queries, self.max_query_len)
+        tb = min(qexec.bucket_pow2(int(n_terms.max()), 1),
+                 self.max_query_len)
+        base = self._base_u32()
+        k_pad = qexec.bucket_pow2(k, floor=8)
+        ad, an = self._active_topk_batch(terms, n_terms, k, k_pad, tb)
+        stack = self._frozen_stack()
+        if stack is None:
+            desc, n = qexec.finalize(ad, an, jnp.asarray(n_terms), base)
+        else:
+            lists, lasts = stack.gather(terms[:, :tb], n_terms)
+            desc, n = qexec.frozen_topk(
+                ad, an, lists, jnp.asarray(n_terms), base, lasts,
+                jnp.int32(k), nt_slots=tb, k_pad=k_pad)
+        D, N = np.asarray(desc), np.asarray(n)
+        return [D[i, : min(int(N[i]), k)].astype(np.int64)
+                for i in range(Q)]
+
+    def conjunctive_batch(self, queries: Sequence[Sequence[int]],
+                          limit: Optional[int] = None) -> List[np.ndarray]:
+        """Batched :meth:`conjunctive`: one list of GLOBAL descending
+        docids per query, all queries in O(1) jitted dispatches."""
+        if not self.batched:
+            return [self._unified("conjunctive", t, limit)
+                    for t in queries]
+        return self._batch_eval("conjunctive", queries, limit)
+
+    def disjunctive_batch(self, queries: Sequence[Sequence[int]],
+                          limit: Optional[int] = None) -> List[np.ndarray]:
+        if not self.batched:
+            return [self._unified("disjunctive", t, limit)
+                    for t in queries]
+        return self._batch_eval("disjunctive", queries, limit)
+
+    def phrase_batch(self, pairs: Sequence[Sequence[int]],
+                     limit: Optional[int] = None) -> List[np.ndarray]:
+        if not self.batched:
+            return [self._unified("phrase", p, limit) for p in pairs]
+        return self._batch_eval("phrase", pairs, limit)
+
+    def topk_conjunctive(self, terms: Sequence[int], k: int) -> np.ndarray:
+        """The newest ``k`` docs holding every term — early-exit
+        evaluation (stops consuming older segments / older slice-chain
+        tiles once k hits are banked), bit-identical to
+        ``conjunctive(terms)[:k]``."""
+        return self.topk_conjunctive_batch([terms], k)[0]
+
+    def topk_conjunctive_batch(self, queries: Sequence[Sequence[int]],
+                               k: int) -> List[np.ndarray]:
+        if not self.batched:
+            return [self._unified("conjunctive", t, int(k))
+                    for t in queries]
+        return self._batch_topk(queries, k)
+
+    # -- queries: per-query host-loop oracle (batched=False) -------------
     def _unified(self, kind: str, terms: Sequence[int],
                  limit: Optional[int]) -> np.ndarray:
         parts = [self._active_desc(kind, terms)]
@@ -258,15 +423,26 @@ class _LifecycleBase:
     def conjunctive(self, terms: Sequence[int],
                     limit: Optional[int] = None) -> np.ndarray:
         """GLOBAL docids holding every term, newest first, across the
-        active pool and all frozen segments."""
+        active pool and all frozen segments.  ``batched=True`` (default)
+        routes through the qexec stack — with a ``limit`` this is the
+        early-exit top-k; ``batched=False`` keeps the per-query
+        host-loop oracle.  Both are bit-identical."""
+        if self.batched:
+            return self._batch_eval("conjunctive", [tuple(terms)],
+                                    limit)[0]
         return self._unified("conjunctive", terms, limit)
 
     def disjunctive(self, terms: Sequence[int],
                     limit: Optional[int] = None) -> np.ndarray:
+        if self.batched:
+            return self._batch_eval("disjunctive", [tuple(terms)],
+                                    limit)[0]
         return self._unified("disjunctive", terms, limit)
 
     def phrase(self, t1: int, t2: int,
                limit: Optional[int] = None) -> np.ndarray:
+        if self.batched:
+            return self._batch_eval("phrase", [(t1, t2)], limit)[0]
         return self._unified("phrase", (t1, t2), limit)
 
 
@@ -279,19 +455,47 @@ class LifecycleEngine(_LifecycleBase):
                  max_query_len: int = 8, max_segments: int = 12,
                  use_kernel: bool = True,
                  interpret: Optional[bool] = None,
-                 bulk_ingest: bool = True):
+                 bulk_ingest: bool = True,
+                 batched: bool = True,
+                 batched_kernel: Optional[bool] = None):
         self.layout = layout
         self.vocab_size = vocab_size
+        self.max_slices = max_slices
+        self.max_len = max_len
         self.max_query_len = max_query_len
         self.use_kernel = use_kernel
         self.interpret = interpret
+        self.batched = batched
         self.segments = seg_mod.SegmentSet(
             layout, vocab_size, docs_per_segment, max_segments=max_segments,
             bulk_ingest=bulk_ingest)
         self.engine = q.make_engine(layout, max_slices, max_len,
                                     max_query_len, use_kernel=use_kernel,
                                     interpret=interpret)
-        self._init_shell()
+        self._init_shell(batched_kernel)
+
+    def _active_batch(self, kind: str, *args):
+        if kind == "phrase":
+            t1, t2 = args
+            fn = qexec.make_active_fn(self.layout, self.max_slices,
+                                      self.max_len, self.max_query_len,
+                                      kind)
+            return fn(self.segments.active.state, jnp.asarray(t1),
+                      jnp.asarray(t2))
+        terms, n_terms, tb = args
+        # the engine is rebuilt (lru-cached) at the trimmed term width,
+        # so its fold runs tb steps instead of max_query_len
+        fn = qexec.make_active_fn(self.layout, self.max_slices,
+                                  self.max_len, tb, kind)
+        return fn(self.segments.active.state,
+                  jnp.asarray(terms[:, :tb]), jnp.asarray(n_terms))
+
+    def _active_topk_batch(self, terms, n_terms, k: int, k_pad: int,
+                           tb: int):
+        fn = qexec.make_active_topk_fn(self.layout, self.max_slices,
+                                       self.max_len, tb, k_pad)
+        return fn(self.segments.active.state, jnp.asarray(terms[:, :tb]),
+                  jnp.asarray(n_terms), jnp.int32(min(k, k_pad)))
 
     def _active_desc(self, kind: str, terms: Sequence[int]) -> np.ndarray:
         state = self.segments.active.state
@@ -319,12 +523,17 @@ class ShardedLifecycleEngine(_LifecycleBase):
                  max_segments: int = 12, rules=None,
                  use_kernel: bool = True,
                  interpret: Optional[bool] = None,
-                 bulk_ingest: bool = True):
+                 bulk_ingest: bool = True,
+                 batched: bool = True,
+                 batched_kernel: Optional[bool] = None):
         self.layout = layout
         self.vocab_size = vocab_size
+        self.max_slices = max_slices
+        self.max_len = max_len
         self.max_query_len = max_query_len
         self.use_kernel = use_kernel
         self.interpret = interpret
+        self.batched = batched
         self.segments = shx.ShardedSegmentSet(
             layout, vocab_size, docs_per_segment, mesh, rules=rules,
             max_segments=max_segments, bulk_ingest=bulk_ingest)
@@ -332,7 +541,32 @@ class ShardedLifecycleEngine(_LifecycleBase):
             layout, mesh, max_slices, max_len, max_query_len,
             rules=self.segments.rules, use_kernel=use_kernel,
             interpret=interpret)
-        self._init_shell()
+        self._init_shell(batched_kernel)
+
+    def _active_batch(self, kind: str, *args):
+        """The sharded engine is ALREADY batched: one shard_map with one
+        all_gather covers the whole query batch (not one per query);
+        its merged output is segment-relative global docids, exactly
+        what the qexec merge expects.  The term matrix stays at the
+        engine's full ``max_query_len`` width (the shard_map engine is
+        compiled for it); only the frozen stack trims."""
+        state = self.segments.active.state
+        if kind == "phrase":
+            t1, t2 = args
+            return self.engine.phrase(state, jnp.asarray(t1, jnp.uint32),
+                                      jnp.asarray(t2, jnp.uint32))
+        terms, n_terms, _tb = args
+        return getattr(self.engine, kind)(
+            state, jnp.asarray(terms, jnp.uint32),
+            jnp.asarray(n_terms, jnp.int32))
+
+    def _active_topk_batch(self, terms, n_terms, k: int, k_pad: int,
+                           tb: int):
+        # tile-level early exit inside shard_map is not implemented for
+        # the sharded active pool; the full batched evaluation feeds the
+        # frozen while_loop, which still early-exits across segments.
+        desc, n = self._active_batch("conjunctive", terms, n_terms, tb)
+        return desc, jnp.minimum(n, jnp.int32(k))
 
     def _active_desc(self, kind: str, terms: Sequence[int]) -> np.ndarray:
         state = self.segments.active.state

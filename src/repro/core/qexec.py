@@ -1,0 +1,509 @@
+"""Batched query execution over the streaming lifecycle (Earlybird §5).
+
+After PR 4 the INGEST side scaled (one fused dispatch per arrival
+batch), but queries still ran one at a time: the lifecycle engines
+walked frozen segments in a host-side Python loop — one jitted call
+plus one device->host ``np.asarray`` sync per segment per query — and
+top-k was a full intersection sliced to ``[:k]``.  This module is the
+query-side counterpart of bulk ingest, in three layers:
+
+  1. **Segment stacking.**  All G frozen segments' per-term compressed
+     docid lists are packed into one padded device-resident stack
+     (:class:`FrozenStack` -> ``StackedLists`` with ``[Q, T, G, ...]``
+     leaves, pow2-bucketed like ``pack_docids`` shapes so a streaming
+     engine sees O(log^2) distinct jit keys).  A query evaluates over
+     EVERY frozen segment inside a single jitted vmap — zero host syncs
+     in the frozen path.  Per-(term, segment) summaries (valid count,
+     first/last docid) ride along for whole-segment skips.
+  2. **Query batching.**  A ``[Q, max_query_len]`` term matrix is
+     evaluated in one dispatch over the active pool (vmap over queries
+     on the existing ``*_asc`` engines; the sharded engine already
+     composes under ``shard_map`` with ONE ``all_gather`` for the whole
+     batch) plus the frozen stack, merged with the vectorised
+     :func:`~repro.core.sharded_index.merge_desc` (disjoint per-segment
+     docid ranges make the sort a newest-first concatenation).
+  3. **Top-k early exit.**  :func:`frozen_topk` banks hits
+     newest-segment-first in a ``lax.while_loop`` and stops consuming
+     older segments once ``k`` hits are collected;
+     :func:`make_active_topk_fn` does the same inside the active
+     materializer, consuming the driving term's slice chain in
+     newest-first tiles.  Both are BIT-IDENTICAL to the full
+     evaluation's top-k (segments own disjoint descending docid
+     ranges; tiles are consumed in docid-descending order), proven in
+     tests/test_qexec.py for every k including k > |result|.
+
+The per-query host-loop path survives as the equivalence oracle
+(``LifecycleEngine(batched=False)``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import postings as post
+from repro.core import query as q
+from repro.core import slicepool
+from repro.core.pointers import PoolLayout
+from repro.core.sharded_index import merge_desc
+from repro.kernels.segment_intersect import (SEG_BLOCK, StackedLists,
+                                             _pow2, decode_stacked,
+                                             pack_docids, repad_stacked,
+                                             stack_packed)
+
+INVALID = q.INVALID
+
+
+def bucket_pow2(n: int, floor: int = 1) -> int:
+    """Next power of two >= max(n, floor) — the shared shape-bucketing
+    rule (query batches, top-k buffers, stack paddings), so jit caches
+    stay O(log) in every dynamic size."""
+    return _pow2(max(int(n), floor))
+
+
+# ---------------------------------------------------------------------------
+# Frozen stack: device-resident [G, ...] view of the packed segments
+# ---------------------------------------------------------------------------
+class FrozenStack:
+    """Stacked device view of an ordered frozen-segment list (oldest ->
+    newest).  Wraps the lifecycle's ``PackedSegment`` objects
+    (duck-typed: ``.packed(t)`` / ``.postings_asc(t)`` / ``.bounds(t)``
+    / ``.doc_base``) and caches, per term, the ``[G, ...]`` stacked
+    leaves plus the (count, last-docid) summaries — built once per
+    (stack, term), reused by every query batch until the next rollover
+    invalidates the whole stack."""
+
+    def __init__(self, psegs: Sequence):
+        self.psegs = list(psegs)
+        self.doc_bases = np.asarray([p.doc_base for p in self.psegs],
+                                    np.uint32)
+        self._terms: Dict[int, Tuple[StackedLists, np.ndarray]] = {}
+        self._posts: Dict[int, np.ndarray] = {}
+        self._empty: Optional[Tuple[StackedLists, np.ndarray]] = None
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.psegs)
+
+    # -- per-term caches (host-side, off the jitted query path) ----------
+    def _term_stack(self, term: int) -> Tuple[StackedLists, np.ndarray]:
+        got = self._terms.get(term)
+        if got is None:
+            st = stack_packed([p.packed(term) for p in self.psegs])
+            lasts = np.zeros(self.n_segments, np.uint32)
+            for g, p in enumerate(self.psegs):
+                c, _, last = p.bounds(term)
+                lasts[g] = last if c else 0
+            got = (st, lasts)
+            self._terms[term] = got
+        return got
+
+    def _empty_stack(self) -> Tuple[StackedLists, np.ndarray]:
+        # padding slots of the [Q, T] term matrix gather this instead of
+        # term 0's real lists: the fold masks them out anyway, and empty
+        # stacks keep the shared NB/PW buckets minimal.
+        if self._empty is None:
+            st = stack_packed([pack_docids(np.zeros(0, np.uint32))
+                               for _ in self.psegs])
+            self._empty = (st, np.zeros(self.n_segments, np.uint32))
+        return self._empty
+
+    def _post_stack(self, term: int) -> np.ndarray:
+        got = self._posts.get(term)
+        if got is None:
+            arrs = [np.asarray(p.postings_asc(term), np.uint32)
+                    for p in self.psegs]
+            width = bucket_pow2(max([a.size for a in arrs] + [1]), 8)
+            got = np.full((self.n_segments, width), INVALID, np.uint32)
+            for g, a in enumerate(arrs):
+                got[g, : a.size] = a
+            self._posts[term] = got
+        return got
+
+    # -- batch gathers ----------------------------------------------------
+    def gather(self, terms: np.ndarray, n_terms: np.ndarray
+               ) -> Tuple[StackedLists, jax.Array]:
+        """Gather a ``[Q, T]`` term matrix into one device stack.
+
+        Returns ``(StackedLists with [Q, T, G, ...] leaves,
+        lasts uint32[Q, T, G])`` — every list padded to the batch's
+        shared pow2 (NB, PW) bucket.  Host-side numpy; the single
+        ``jnp.asarray`` per leaf is the only device transfer.
+        """
+        cells = [[self._term_stack(int(t)) if j < int(n)
+                  else self._empty_stack()
+                  for j, t in enumerate(row)]
+                 for row, n in zip(terms, n_terms)]
+        nb = bucket_pow2(max(c[0].n_blocks for row in cells for c in row))
+        pw = bucket_pow2(max(c[0].n_words for row in cells for c in row))
+        rows = [[repad_stacked(c[0], nb, pw) for c in row] for row in cells]
+        leaves = StackedLists(*[
+            np.stack([np.stack([getattr(c, f) for c in row])
+                      for row in rows])
+            for f in StackedLists._fields])
+        lasts = np.stack([np.stack([c[1] for c in row]) for row in cells])
+        return (jax.tree.map(jnp.asarray, leaves), jnp.asarray(lasts))
+
+    def gather_postings(self, t1s: np.ndarray, t2s: np.ndarray,
+                        n_live: Optional[int] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+        """Gather positional postings stacks for a phrase batch:
+        ``(uint32[Q, G, PL], uint32[Q, G, PL])``, INVALID-padded
+        ascending (segment-relative docid, position) postings.  Rows at
+        index >= ``n_live`` (batch padding) gather an all-INVALID stack
+        instead of term 0's real postings, so padding never inflates the
+        shared width bucket or ships discarded data."""
+        if n_live is None:
+            n_live = len(t1s)
+        empty = np.full((self.n_segments, 8), INVALID, np.uint32)
+        p1 = [self._post_stack(int(t)) if i < n_live else empty
+              for i, t in enumerate(t1s)]
+        p2 = [self._post_stack(int(t)) if i < n_live else empty
+              for i, t in enumerate(t2s)]
+        width = bucket_pow2(max(a.shape[1] for a in p1 + p2))
+
+        def pad(stacks):
+            out = np.full((len(stacks), self.n_segments, width), INVALID,
+                          np.uint32)
+            for i, a in enumerate(stacks):
+                out[i, :, : a.shape[1]] = a
+            return jnp.asarray(out)
+
+        return pad(p1), pad(p2)
+
+
+# ---------------------------------------------------------------------------
+# Jitted batched evaluation
+# ---------------------------------------------------------------------------
+def _fold_conjunctive(ids_tg, ns_tg, nt, nt_slots, hit01=None):
+    """Intersect one (query, segment) cell's term lists: ``[T, W]``
+    ascending INVALID-padded decoded docids -> (asc, n).  ``hit01``
+    optionally injects the kernel-computed membership mask for the
+    (term0, term1) driving pair — bit-identical to the jnp fold."""
+    cur, n = ids_tg[0], ns_tg[0]
+    for j in range(1, nt_slots):
+        use = j < nt
+        if j == 1 and hit01 is not None:
+            hit = hit01
+        else:
+            hit = q.member_asc(cur, ids_tg[j])
+        nxt, nn = q._compact(cur, hit)
+        cur = jnp.where(use, nxt, cur)
+        n = jnp.where(use, nn, n)
+    return cur, n
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "nt_slots", "kernel",
+                                    "interpret"))
+def frozen_merge(active_desc, active_n, lists: StackedLists, n_terms,
+                 base, *, kind: str, nt_slots: int, kernel: bool = False,
+                 interpret=None):
+    """Evaluate + merge a query batch over the frozen stack in ONE
+    dispatch.
+
+    ``active_desc``/``active_n``: the active segment's per-query
+    descending SEGMENT-RELATIVE docids (single-device or sharded-merged)
+    — globalised here by ``base`` and masked for padding rows
+    (``n_terms == 0``).  ``lists``: ``[Q, T, G, ...]`` stack.  Returns
+    globally-descending ``(uint32[Q, A + G * W_kind], int32[Q])`` —
+    bit-identical to the host-loop oracle because segments own disjoint
+    docid ranges (the merge sort IS newest-first concatenation).
+
+    ``kernel=True`` routes the driving (term0, term1) intersection of
+    every (query, segment) pair through the batched Pallas grid kernel
+    (one pallas_call over Q * G rows); the fold for further terms stays
+    jnp.  Masks are bit-identical, so results do not depend on the flag.
+    """
+    from repro.kernels import ops
+    Q, T, G, _ = lists.firsts.shape
+    W = lists.n_blocks * SEG_BLOCK
+    ids = decode_stacked(lists)                       # [Q, T, G, W]
+    ns = jnp.asarray(lists.ns)                         # [Q, T, G]
+
+    if kind == "conjunctive":
+        hit01 = None
+        if kernel and nt_slots >= 2:
+            flat = lambda x: x[:, 0].reshape((Q * G,) + x.shape[3:])
+            flatb = lambda x: x[:, 1].reshape((Q * G,) + x.shape[3:])
+            a_st = StackedLists(*[flat(getattr(lists, f))
+                                  for f in StackedLists._fields[:-1]],
+                                ns=lists.ns[:, 0].reshape(Q * G))
+            b_st = StackedLists(*[flatb(getattr(lists, f))
+                                  for f in StackedLists._fields[:-1]],
+                                ns=lists.ns[:, 1].reshape(Q * G))
+            mask = ops.segment_intersect_mask_batched(
+                a_st, b_st, use_kernel=True, interpret=interpret)
+            hit01 = mask.reshape(Q, G, W).astype(bool)
+
+        def per_seg(ids_tg, ns_tg, nt, hit_g):
+            asc, n = _fold_conjunctive(ids_tg, ns_tg, nt, nt_slots, hit_g)
+            return q.asc_to_desc(asc, n), n
+
+        if hit01 is None:
+            hit01 = jnp.zeros((Q, G, W), bool)  # unused placeholder
+            per_seg_ = lambda i, s, nt, h: per_seg(i, s, nt, None)
+        else:
+            per_seg_ = per_seg
+        per_q = jax.vmap(per_seg_, in_axes=(1, 1, None, 0))
+        desc_seg, n_seg = jax.vmap(per_q)(ids, ns, n_terms, hit01)
+    elif kind == "disjunctive":
+        def per_seg(ids_tg, nt):
+            slot = jnp.arange(nt_slots)[:, None] < nt
+            flat = jnp.where(slot, ids_tg, INVALID).reshape(-1)
+            asc, n = q.dedup_asc(jnp.sort(flat))
+            return q.asc_to_desc(asc, n), n
+        per_q = jax.vmap(per_seg, in_axes=(1, None))
+        desc_seg, n_seg = jax.vmap(per_q)(ids, n_terms)
+    else:
+        raise ValueError(f"unknown kind {kind!r}")
+
+    live = n_terms > 0
+    return _merge_parts(active_desc, active_n, desc_seg, n_seg, live, base)
+
+
+@jax.jit
+def frozen_phrase_merge(active_desc, active_n, p1, p2, doc_bases, live,
+                        base):
+    """Phrase evaluation over the frozen postings stacks
+    (``uint32[Q, G, PL]`` ascending packed (docid, pos) postings, the
+    positional substrate the compressed docid stacks drop) merged with
+    the active part — the batched counterpart of ``phrase_packed``."""
+    PL = p1.shape[-1]
+
+    def per_seg(x1, x2, db):
+        want = jnp.where(x1 != INVALID, x1 + jnp.uint32(1), INVALID)
+        hit = q.member_asc(want, x2)
+        ids = jnp.where(hit, post.docid(x1), INVALID)
+        asc, n = q.dedup_asc(jnp.sort(ids))
+        gids = jnp.where(jnp.arange(PL) < n, asc + db, INVALID)
+        return q.asc_to_desc(gids, n), n
+
+    per_q = jax.vmap(per_seg, in_axes=(0, 0, 0))
+    desc_seg, n_seg = jax.vmap(per_q, in_axes=(0, 0, None))(p1, p2,
+                                                            doc_bases)
+    return _merge_parts(active_desc, active_n, desc_seg, n_seg, live > 0,
+                        base)
+
+
+def _merge_parts(active_desc, active_n, desc_seg, n_seg, live, base):
+    Q, A = active_desc.shape
+    G, W = desc_seg.shape[1], desc_seg.shape[2]
+    an = jnp.where(live, active_n, 0)
+    a_glob = jnp.where(jnp.arange(A)[None, :] < an[:, None],
+                       active_desc + base, INVALID)
+    nseg = jnp.where(live[:, None], n_seg, 0)
+    dseg = jnp.where(jnp.arange(W)[None, None, :] < nseg[..., None],
+                     desc_seg, INVALID)
+    flat = jnp.concatenate([a_glob, dseg.reshape(Q, G * W)], axis=1)
+    merged = jax.vmap(merge_desc)(flat)
+    return merged, an + jnp.sum(nseg, axis=1)
+
+
+@jax.jit
+def finalize(active_desc, active_n, live, base):
+    """No-frozen-segments fast path: globalise + mask the active batch."""
+    an = jnp.where(live > 0, active_n, 0)
+    A = active_desc.shape[1]
+    out = jnp.where(jnp.arange(A)[None, :] < an[:, None],
+                    active_desc + base, INVALID)
+    return out, an
+
+
+# ---------------------------------------------------------------------------
+# Top-k early exit (newest-first while_loop over the stack)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("nt_slots", "k_pad"))
+def frozen_topk(active_desc, active_n, lists: StackedLists, n_terms,
+                base, lasts_doc, k, *, nt_slots: int, k_pad: int):
+    """Bank the newest ``k`` conjunctive hits, consuming segments
+    newest-first and STOPPING as soon as k are banked — Earlybird's
+    early termination at segment granularity, bit-identical to the full
+    evaluation's ``[:k]`` because segments own disjoint descending docid
+    ranges.  Per-(term, segment) summaries (count, first/last docid)
+    skip whole segments that cannot contribute (an empty term list, or
+    term ranges that do not overlap) without decoding a single block.
+
+    ``k`` is dynamic (clamped to the static ``k_pad`` buffer width) so
+    one compiled program serves every k in a pow2 bucket.
+    """
+    Q, T, G, _ = lists.firsts.shape
+    W = lists.n_blocks * SEG_BLOCK
+    an = jnp.minimum(jnp.where(n_terms > 0, active_n, 0), k)
+    A = active_desc.shape[1]
+    if A >= k_pad:
+        aa = active_desc[:, :k_pad]
+    else:
+        aa = jnp.concatenate(
+            [active_desc,
+             jnp.full((Q, k_pad - A), INVALID, active_desc.dtype)], axis=1)
+    out0 = jnp.where(jnp.arange(k_pad)[None, :] < an[:, None],
+                     aa + base, INVALID)
+
+    def one(out_i, b_i, leaves_q, nt, ld_q):
+        fd_q = leaves_q.firsts[..., 0]          # [T, G] first docids
+
+        def cond(c):
+            i, b, _ = c
+            return (i < G) & (b < k)
+
+        def body(c):
+            i, b, out = c
+            g = G - 1 - i                       # newest segment first
+            seg = jax.tree.map(lambda x: x[:, g], leaves_q)
+            ns_g = jnp.asarray(seg.ns)
+            slot = jnp.arange(nt_slots) < nt
+            nonempty = jnp.all(jnp.where(slot, ns_g > 0, True)) & (nt > 0)
+            lo = jnp.max(jnp.where(slot, fd_q[:, g], jnp.uint32(0)))
+            hi = jnp.min(jnp.where(slot, ld_q[:, g],
+                                   jnp.uint32(INVALID - jnp.uint32(1))))
+            live_g = nonempty & (lo <= hi)
+
+            def eval_seg(_):
+                ids = decode_stacked(seg)      # [T, W]
+                asc, n = _fold_conjunctive(ids, ns_g, nt, nt_slots)
+                return q.asc_to_desc(asc, n), n
+
+            desc_g, n_g = jax.lax.cond(
+                live_g, eval_seg,
+                lambda _: (jnp.full((W,), INVALID, jnp.uint32),
+                           jnp.int32(0)),
+                None)
+            lane = jnp.arange(W)
+            idx = jnp.where(lane < n_g, b + lane, k_pad)
+            out = out.at[idx].set(desc_g, mode="drop")
+            return i + 1, jnp.minimum(k, b + n_g), out
+
+        _, b, out = jax.lax.while_loop(cond, body,
+                                       (jnp.int32(0), b_i, out_i))
+        return out, b
+
+    return jax.vmap(one, in_axes=(0, 0, 0, 0, 0))(out0, an, lists,
+                                                  n_terms, lasts_doc)
+
+
+@functools.lru_cache(maxsize=None)
+def make_active_topk_fn(layout: PoolLayout, max_slices: int, max_len: int,
+                        max_query_len: int = 8, k_pad: int = 8,
+                        tile: int = 128):
+    """Early-exit top-k over the ACTIVE segment: the driving term's
+    slice chain is consumed in newest-first tiles (the materializer's
+    reverse-chronological order IS descending docid order), each tile's
+    docids membership-tested against the other terms' lists, hits
+    banked — and the loop stops materialising older slice-chain tiles
+    once ``k`` hits are banked.  Bit-identical to
+    ``QueryEngine.topk_conjunctive`` (the full-intersection oracle):
+    hits surface in exactly the full evaluation's descending order.
+
+    Returns a jitted ``f(state, terms[Q, T], n_terms[Q], k) ->
+    (desc uint32[Q, k_pad], n int32[Q])`` with SEGMENT-RELATIVE docids
+    (``frozen_topk`` globalises).  ``k`` is dynamic up to ``k_pad``.
+    """
+    tile = min(tile, max_len)
+    n_tiles = -(-max_len // tile)  # ceil: the ragged last tile still
+    #                                materializes (j < total masks it)
+    eng = q.make_engine(layout, max_slices, max_len, max_query_len)
+    walk = slicepool.make_chain_walker(layout, max_slices)
+
+    @jax.jit
+    def run(state, terms, n_terms, k):
+        def one(trow, nt):
+            ids, _ = jax.vmap(lambda t: eng.docids_asc(state, t))(trow)
+            bases, starts, lasts, nsl = walk(state, trow[0])
+            cum = slicepool.chain_lens_cum(starts, lasts, nsl, max_slices)
+            total = jnp.minimum(cum[-1], max_len)
+            k_eff = jnp.where(nt > 0, k, 0)
+            out0 = jnp.full((k_pad,), INVALID, jnp.uint32)
+
+            def cond(c):
+                ti, b, _, _ = c
+                return (ti < n_tiles) & (b < k_eff) & (ti * tile < total)
+
+            def body(c):
+                ti, b, prev, out = c
+                # materialize ONE newest-first tile of the driving
+                # term's chain — the materializer's own address math
+                # (slicepool.chain_window_addrs), restricted to lanes
+                # [ti * tile, (ti + 1) * tile).
+                j = ti * tile + jnp.arange(tile, dtype=jnp.int32)
+                addr = slicepool.chain_window_addrs(bases, lasts, cum, j,
+                                                    max_slices)
+                vals = state.heap[addr]
+                d = jnp.where(j < total, post.docid(vals),
+                              jnp.uint32(INVALID))
+                prev_lane = jnp.concatenate([prev[None], d[:-1]])
+                keep = (d != INVALID) & (d != prev_lane)  # dedup positions
+                hit = keep
+                for jj in range(1, max_query_len):
+                    m = q.member_asc(d, ids[jj])
+                    hit = hit & jnp.where(jj < nt, m, True)
+                comp, n_t = q._compact(d, hit)  # descending, hits first
+                lane = jnp.arange(tile)
+                idx = jnp.where(lane < n_t, b + lane, k_pad)
+                out = out.at[idx].set(comp, mode="drop")
+                return (ti + 1, jnp.minimum(k_eff, b + n_t),
+                        d[tile - 1], out)
+
+            _, b, _, out = jax.lax.while_loop(
+                cond, body,
+                (jnp.int32(0), jnp.int32(0), jnp.uint32(INVALID), out0))
+            return out, b
+
+        return jax.vmap(one)(terms, n_terms)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Batched active evaluation (single-device; the sharded engine is
+# already batched — see sharded_index.make_sharded_engine)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def make_active_fn(layout: PoolLayout, max_slices: int, max_len: int,
+                   max_query_len: int, kind: str):
+    """One jitted dispatch for a whole query batch over the active pool:
+    vmap over queries of the single-device ``*_asc`` engines (the pure
+    jnp engine — its masks are bit-identical to the kernel engine's, and
+    jnp composes under vmap).  Returns SEGMENT-RELATIVE descending
+    INVALID-padded lists + counts; padding rows are masked downstream.
+    """
+    eng = q.make_engine(layout, max_slices, max_len, max_query_len)
+
+    if kind == "phrase":
+        @jax.jit
+        def run(state, t1s, t2s):
+            def one(t1, t2):
+                asc, n = eng.phrase_asc(state, t1, t2)
+                return q.asc_to_desc(asc, n), n
+            return jax.vmap(one)(t1s, t2s)
+    else:
+        fn = getattr(eng, f"{kind}_asc")
+
+        @jax.jit
+        def run(state, terms, n_terms):
+            def one(trow, nt):
+                asc, n = fn(state, trow, nt)
+                return q.asc_to_desc(asc, n), n
+            return jax.vmap(one)(terms, n_terms)
+
+    return run
+
+
+def pad_query_batch(queries: Sequence[Sequence[int]], max_query_len: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad a list of term tuples to a pow2-bucketed ``[Qb, T]`` matrix
+    plus per-row term counts (0 for padding rows)."""
+    Qb = bucket_pow2(len(queries))
+    terms = np.zeros((Qb, max_query_len), np.uint32)
+    n_terms = np.zeros(Qb, np.int32)
+    for i, row in enumerate(queries):
+        row = list(row)
+        if not 0 < len(row) <= max_query_len:
+            raise ValueError(
+                f"query {i} has {len(row)} terms; need 1..{max_query_len}")
+        terms[i, : len(row)] = row
+        n_terms[i] = len(row)
+    return terms, n_terms

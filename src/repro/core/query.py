@@ -103,6 +103,7 @@ class QueryEngine(NamedTuple):
     phrase_asc: callable        # (state, t1, t2) -> (asc ids, n)
 
 
+@functools.lru_cache(maxsize=None)
 def make_engine(layout: PoolLayout, max_slices: int, max_len: int,
                 max_query_len: int = 8, *, use_kernel: bool = False,
                 interpret: bool = None) -> QueryEngine:
@@ -114,6 +115,11 @@ def make_engine(layout: PoolLayout, max_slices: int, max_len: int,
     bit-identical masks, so results do not depend on the flag.
     ``interpret`` is forwarded to the kernel (None = auto: interpret
     everywhere but real TPU backends).
+
+    Memoised per (layout, max_slices, max_len, max_query_len, use_kernel,
+    interpret) the same way ``make_bulk_ingest_fn`` is, so rollover's
+    fresh engines (and the batched qexec path building its own jnp
+    engine) reuse jit caches instead of recompiling every query shape.
     """
     materialize = slicepool.make_materializer(layout, max_slices, max_len)
 
@@ -208,7 +214,7 @@ def make_engine(layout: PoolLayout, max_slices: int, max_len: int,
         def body(i, acc):
             plist, n = materialize(state, terms[i])
             ok = i < n_terms
-            s = jnp.sum(plist.astype(jnp.float64 if False else jnp.uint32))
+            s = jnp.sum(plist.astype(jnp.uint32))
             return acc + jnp.where(ok, s, jnp.uint32(0))
         return jax.lax.fori_loop(0, max_query_len, body, jnp.uint32(0))
 

@@ -67,6 +67,18 @@ class FrozenSegment:
         return ids[np.concatenate([[True], ids[1:] != ids[:-1]])] \
             if ids.size else ids
 
+    def docid_bounds(self, term: int) -> Tuple[int, int, int]:
+        """O(1) per-term summary ``(n_postings, first_docid, last_docid)``
+        (docids as stored — segment-relative here, global once a
+        ``docid_map`` was baked in).  The qexec frozen stack uses these
+        for whole-segment skips without forcing a pack: ``n_postings==0``
+        or disjoint ``[first, last]`` ranges can never intersect."""
+        a, b = int(self.offsets[term]), int(self.offsets[term + 1])
+        if a == b:
+            return 0, 0, 0
+        shift = np.uint32(post.POS_BITS)
+        return b - a, int(self.data[a] >> shift), int(self.data[b - 1] >> shift)
+
     def term_freqs(self) -> np.ndarray:
         return np.diff(self.offsets).astype(np.int64)
 

@@ -357,6 +357,19 @@ class ShardedFrozenSegment:
         cat = np.concatenate(parts) if parts else np.zeros(0, np.uint32)
         return np.sort(cat)[::-1]  # disjoint residue classes: no dedup
 
+    def docid_bounds(self, term: int):
+        """O(S) summary ``(n_postings, first_gid, last_gid)`` over all
+        shards (shards store GLOBAL-within-segment docids, so min/max
+        across shards bound the merged list)."""
+        n, first, last = 0, 0, 0
+        for fz in self.shards:
+            c, f, l = fz.docid_bounds(term)
+            if c:
+                first = f if n == 0 else min(first, f)
+                last = l if n == 0 else max(last, l)
+                n += c
+        return n, first, last
+
     def term_freqs(self) -> np.ndarray:
         return np.sum([fz.term_freqs() for fz in self.shards], axis=0)
 

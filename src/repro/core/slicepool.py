@@ -618,6 +618,28 @@ def make_chain_walker(layout: PoolLayout, max_slices: int):
     return walk
 
 
+def chain_lens_cum(starts, lasts, n_slices, max_slices: int):
+    """Cumulative flattened lane counts of a walked chain: ``cum[i]`` is
+    the number of postings in the newest ``i + 1`` slices (``cum[-1]`` =
+    the chain's total).  Shared by the full materializer and the tiled
+    top-k window materializer so both use ONE lane-address source."""
+    live = jnp.arange(max_slices) < n_slices
+    lens = jnp.where(live, lasts - starts + 1, 0).astype(jnp.int32)
+    return jnp.cumsum(lens)
+
+
+def chain_window_addrs(bases, lasts, cum, lanes, max_slices: int):
+    """Heap addresses of reverse-chronological lanes ``lanes`` of a
+    walked chain (the materializer's vectorised two-phase gather,
+    restricted to an arbitrary lane window).  Lanes >= ``cum[-1]`` yield
+    clamped garbage addresses — callers mask by the total."""
+    s = jnp.searchsorted(cum, lanes, side="right").astype(jnp.int32)
+    s = jnp.minimum(s, max_slices - 1)
+    before = jnp.where(s > 0, cum[jnp.maximum(s - 1, 0)], 0)
+    within = (lanes - before).astype(jnp.uint32)
+    return bases[s] + lasts[s] - within
+
+
 def make_materializer(layout: PoolLayout, max_slices: int, max_len: int):
     """Build ``materialize(state, term) -> (postings_desc, length)``.
 
@@ -630,16 +652,10 @@ def make_materializer(layout: PoolLayout, max_slices: int, max_len: int):
 
     def materialize(state: PoolState, term):
         bases, starts, lasts, n = walk(state, term)
-        live = jnp.arange(max_slices) < n
-        lens = jnp.where(live, lasts - starts + 1, 0).astype(jnp.int32)
-        cum = jnp.cumsum(lens)
+        cum = chain_lens_cum(starts, lasts, n, max_slices)
         total = jnp.minimum(cum[-1], max_len)
         j = jnp.arange(max_len, dtype=jnp.int32)
-        s = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
-        s = jnp.minimum(s, max_slices - 1)
-        before = jnp.where(s > 0, cum[jnp.maximum(s - 1, 0)], 0)
-        within = (j - before).astype(jnp.uint32)
-        addr = bases[s] + lasts[s] - within
+        addr = chain_window_addrs(bases, lasts, cum, j, max_slices)
         vals = state.heap[addr]
         vals = jnp.where(j < total, vals, jnp.uint32(0))
         return vals, total

@@ -17,7 +17,8 @@ from repro.kernels.paged_attention import PAGE
 from repro.kernels.paged_attention import paged_attention as _paged_attention
 from repro.kernels.postings_intersect import intersect_mask as _intersect_mask
 from repro.kernels.segment_intersect import (
-    segment_intersect_mask as _segment_intersect_mask)
+    segment_intersect_mask as _segment_intersect_mask,
+    segment_intersect_mask_batched as _segment_intersect_mask_batched)
 
 
 def _default_interpret() -> bool:
@@ -53,6 +54,23 @@ def segment_intersect_mask(a, b, *, interpret=None):
     return _segment_intersect_mask(a, b, interpret=interpret)
 
 
+def segment_intersect_mask_batched(a, b, *, use_kernel=None,
+                                   interpret=None):
+    """Row-wise masks of a whole (query, segment) batch of StackedLists.
+
+    ``use_kernel=None`` auto-routes like :func:`bulk_append`: the grid
+    kernel on a real TPU backend, the vmapped jnp oracle everywhere else
+    (the batched query hot path must not pay the interpreter's
+    per-element DMA simulation on CPU; the oracle IS the semantics)."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return ref.segment_intersect_mask_batched_ref(a, b)
+    if interpret is None:
+        interpret = _default_interpret()
+    return _segment_intersect_mask_batched(a, b, interpret=interpret)
+
+
 def bulk_append(heap, tail, freq, post_addr, post_val, ptr_addr, ptr_val,
                 term_idx, term_tail, term_freq, *, use_kernel=None,
                 interpret=None):
@@ -76,4 +94,5 @@ def bulk_append(heap, tail, freq, post_addr, post_val, ptr_addr, ptr_val,
 
 
 __all__ = ["paged_attention", "embedding_bag", "intersect_mask",
-           "segment_intersect_mask", "bulk_append", "ref", "PAGE"]
+           "segment_intersect_mask", "segment_intersect_mask_batched",
+           "bulk_append", "ref", "PAGE"]

@@ -86,3 +86,15 @@ def segment_intersect_mask_ref(a_packed, b_packed):
     if b_ids.shape[0] == 0:
         return jnp.zeros(a_ids.shape, jnp.int32)
     return intersect_mask_ref(a_ids, b_ids)
+
+
+def segment_intersect_mask_batched_ref(a_stacked, b_stacked):
+    """Oracle for the batched (query, segment) grid kernel AND its CPU
+    execution path: batched all-blocks decode of both stacks, then
+    row-wise membership.  Stacks carry one leading ``[N, ...]`` axis."""
+    from repro.kernels.segment_intersect import decode_stacked
+    a_ids = decode_stacked(a_stacked)           # [N, NBa * SEG_BLOCK]
+    if a_ids.shape[-1] == 0 or a_ids.shape[0] == 0:
+        return jnp.zeros(a_ids.shape, jnp.int32)
+    b_ids = decode_stacked(b_stacked)
+    return jax.vmap(intersect_mask_ref)(a_ids, b_ids)

@@ -108,6 +108,114 @@ def pack_docids(ids: np.ndarray) -> PackedList:
                       payload=jnp.asarray(np.concatenate(planes)), n=n)
 
 
+class StackedLists(NamedTuple):
+    """A batch of :class:`PackedList`s padded to SHARED pow2 shapes and
+    stacked on leading axes — the device-resident frozen-segment stack
+    (``repro.core.qexec``).
+
+    Leaves carry arbitrary leading dims (``[..., NB]`` block tables,
+    ``[..., PW]`` payloads, ``[...]`` counts), so one container covers a
+    per-term ``[G, ...]`` segment stack, a gathered ``[Q, T, G, ...]``
+    query batch, and the ``[N, ...]`` flattening the batched kernel
+    grids over.  Pad blocks decode to the INVALID sentinel (firsts =
+    INVALID, gap plane all zero), so set ops ignore them exactly like
+    :func:`pack_docids`'s own pad blocks.
+    """
+    firsts: jax.Array   # uint32[..., NB]
+    bws: jax.Array      # int32[..., NB]
+    woffs: jax.Array    # int32[..., NB]
+    payload: jax.Array  # uint32[..., PW]
+    ns: jax.Array       # int32[...] valid docids per list
+
+    @property
+    def n_blocks(self) -> int:
+        return self.firsts.shape[-1]
+
+    @property
+    def n_words(self) -> int:
+        return self.payload.shape[-1]
+
+
+def stack_packed(packs, n_blocks: int = None,
+                 n_words: int = None) -> StackedLists:
+    """Stack PackedLists into one :class:`StackedLists` (host-side numpy,
+    runs at rollover / gather time — off the jitted query path).
+
+    ``n_blocks``/``n_words`` override the shared padded shape (they must
+    be >= every input's); by default the next power of two over the
+    batch, so a streaming engine sees O(log^2) distinct stack shapes.
+    Every pad block's ``woff`` points at the guaranteed-zero tail of its
+    own row (``len(payload) - SLAB_WORDS`` — pack_docids always leaves
+    >= SLAB_WORDS trailing zeros), so pad blocks decode to INVALID and
+    never alias real gap data.
+    """
+    G = len(packs)
+    nb = max([p.n_blocks for p in packs] + [1])
+    pw = max([p.payload.shape[0] for p in packs] + [SLAB_WORDS])
+    nb = _pow2(nb) if n_blocks is None else n_blocks
+    pw = _pow2(pw) if n_words is None else n_words
+    firsts = np.full((G, nb), INVALID, np.uint32)
+    bws = np.ones((G, nb), np.int32)
+    woffs = np.zeros((G, nb), np.int32)
+    payload = np.zeros((G, pw), np.uint32)
+    ns = np.zeros((G,), np.int32)
+    for g, p in enumerate(packs):
+        k = p.n_blocks
+        pay = np.asarray(p.payload)
+        payload[g, : pay.shape[0]] = pay
+        woffs[g, :] = pay.shape[0] - SLAB_WORDS
+        if k:
+            firsts[g, :k] = np.asarray(p.firsts)
+            bws[g, :k] = np.asarray(p.bws)
+            woffs[g, :k] = np.asarray(p.woffs)
+        ns[g] = p.n
+    return StackedLists(firsts=firsts, bws=bws, woffs=woffs,
+                        payload=payload, ns=ns)
+
+
+def repad_stacked(s: StackedLists, n_blocks: int,
+                  n_words: int) -> StackedLists:
+    """Grow a (numpy-leaved) stack to a wider shared bucket.  New pad
+    blocks reuse each row's existing zero-tail woff; new payload words
+    are zeros, so decode semantics are unchanged."""
+    nb0, pw0 = s.n_blocks, s.n_words
+    if nb0 == n_blocks and pw0 == n_words:
+        return s
+    assert nb0 <= n_blocks and pw0 <= n_words, (nb0, n_blocks, pw0, n_words)
+    lead = s.firsts.shape[:-1]
+    pad_b = [(0, 0)] * len(lead) + [(0, n_blocks - nb0)]
+    pad_w = [(0, 0)] * len(lead) + [(0, n_words - pw0)]
+    zero_woff = s.payload.shape[-1] - SLAB_WORDS  # per-row zero tail
+    woffs = np.concatenate(
+        [s.woffs, np.broadcast_to(
+            np.asarray(zero_woff, np.int32),
+            lead + (n_blocks - nb0,)).copy()]
+        , axis=-1) if n_blocks > nb0 else s.woffs
+    return StackedLists(
+        firsts=np.pad(s.firsts, pad_b, constant_values=INVALID),
+        bws=np.pad(s.bws, pad_b, constant_values=1),
+        woffs=woffs,
+        payload=np.pad(s.payload, pad_w),
+        ns=s.ns)
+
+
+def decode_stacked(s: StackedLists) -> jax.Array:
+    """Batched all-blocks decode: uint32[..., NB * SEG_BLOCK] ascending
+    docids, INVALID-padded past each list's ``ns``.  Pure jnp over
+    arbitrary leading dims — the vmap-able substrate for the batched
+    query path (and the batched kernel's oracle)."""
+    lead = s.firsts.shape[:-1]
+    nb = s.n_blocks
+    idx = s.woffs[..., None] + jnp.arange(SLAB_WORDS, dtype=jnp.int32)
+    slabs = jnp.take_along_axis(s.payload[..., None, :], idx, axis=-1)
+    gaps = _unpack_gaps(slabs, s.bws)
+    ids = s.firsts[..., None] + jnp.cumsum(gaps, axis=-1, dtype=jnp.uint32)
+    flat = ids.reshape(lead + (nb * SEG_BLOCK,))
+    lane = jnp.arange(nb * SEG_BLOCK, dtype=jnp.int32)
+    return jnp.where(lane < jnp.asarray(s.ns)[..., None], flat,
+                     jnp.uint32(INVALID))
+
+
 def _plane_shifts(shape, bits_each: int):
     """Per-lane shift amounts as a broadcasted iota over the last axis
     (Pallas kernels cannot capture constant arrays, and TPU iota must be
@@ -270,3 +378,132 @@ def segment_intersect_mask(a: PackedList, b: PackedList, *,
                  b.firsts, b.bws, b.woffs, b.payload, n_valid,
                  na_blocks=a.n_blocks, nb_blocks=b.n_blocks,
                  interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Batched kernel: one grid step per (query, segment) pair
+# ---------------------------------------------------------------------------
+def _kernel_batched(a_firsts, a_bws, a_woffs, b_firsts, b_bws, b_woffs,
+                    n_valid, a_hbm, b_hbm, o_hbm, a_slab, b_slab, m_buf,
+                    sem_a, sem_b, sem_o, *, na_blocks: int, nb_blocks: int):
+    """One two-pointer walk per grid step ``r`` — row r of the stacked
+    inputs is one (query, segment) pair, so a whole query batch over a
+    whole frozen stack is a single pallas_call with grid=(Q * G,).  Pad
+    rows/blocks (firsts INVALID, zero gap planes) walk through harmlessly:
+    INVALID never equals a valid docid and sorts above every block max."""
+    r = pl.program_id(0)
+
+    def copy_a(ia):
+        return pltpu.make_async_copy(
+            a_hbm.at[r, pl.ds(a_woffs[r, ia], SLAB_WORDS)], a_slab, sem_a)
+
+    def copy_b(ib):
+        return pltpu.make_async_copy(
+            b_hbm.at[r, pl.ds(b_woffs[r, ib], SLAB_WORDS)], b_slab, sem_b)
+
+    def flush(ia):
+        cp = pltpu.make_async_copy(
+            m_buf, o_hbm.at[r, pl.ds(ia * SEG_BLOCK, SEG_BLOCK)], sem_o)
+        cp.start()
+        cp.wait()
+
+    copy_a(0).start()
+    copy_a(0).wait()
+    copy_b(0).start()
+    copy_b(0).wait()
+    m_buf[...] = jnp.zeros((SEG_BLOCK,), jnp.int32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (SEG_BLOCK, 1), 0)
+    lane = lane.reshape(SEG_BLOCK)
+
+    def step(_, carry):
+        ia, ib = carry
+        live = ia < na_blocks
+        iam = jnp.minimum(ia, na_blocks - 1)
+        ibm = jnp.minimum(ib, nb_blocks - 1)
+        a_ids = a_firsts[r, iam] + jnp.cumsum(
+            _unpack_gaps(a_slab[...], a_bws[r, iam]), dtype=jnp.uint32)
+        b_ids = b_firsts[r, ibm] + jnp.cumsum(
+            _unpack_gaps(b_slab[...], b_bws[r, ibm]), dtype=jnp.uint32)
+        valid = (iam * SEG_BLOCK + lane) < n_valid[r]
+        eq = (a_ids[:, None] == b_ids[None, :]) & valid[:, None]
+        hits = jnp.max(eq.astype(jnp.int32), axis=1)
+        m_buf[...] = jnp.where(live, jnp.maximum(m_buf[...], hits),
+                               m_buf[...])
+        a_max = a_ids[SEG_BLOCK - 1]
+        b_max = b_ids[SEG_BLOCK - 1]
+        b_done = ib >= nb_blocks - 1
+        adv_a = live & ((a_max <= b_max) | b_done)
+        adv_b = live & ((b_max <= a_max) & ~b_done)
+
+        @pl.when(adv_a)
+        def _():
+            flush(iam)
+            m_buf[...] = jnp.zeros((SEG_BLOCK,), jnp.int32)
+
+        ia2 = ia + adv_a.astype(jnp.int32)
+        ib2 = ib + adv_b.astype(jnp.int32)
+
+        @pl.when(adv_a & (ia2 < na_blocks))
+        def _():
+            cp = copy_a(ia2)
+            cp.start()
+            cp.wait()
+
+        @pl.when(adv_b)
+        def _():
+            cp = copy_b(ib2)
+            cp.start()
+            cp.wait()
+
+        return ia2, ib2
+
+    jax.lax.fori_loop(0, na_blocks + nb_blocks, step, (0, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _call_batched(a: StackedLists, b: StackedLists, *,
+                  interpret: bool = True):
+    N, na_blocks = a.firsts.shape
+    nb_blocks = b.firsts.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(N,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+                  pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((SLAB_WORDS,), jnp.uint32),
+            pltpu.VMEM((SLAB_WORDS,), jnp.uint32),
+            pltpu.VMEM((SEG_BLOCK,), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_batched, na_blocks=na_blocks,
+                          nb_blocks=nb_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, na_blocks * SEG_BLOCK),
+                                       jnp.int32),
+        interpret=interpret,
+    )(a.firsts, a.bws, a.woffs, b.firsts, b.bws, b.woffs,
+      jnp.asarray(a.ns, jnp.int32), a.payload, b.payload)
+
+
+def segment_intersect_mask_batched(a: StackedLists, b: StackedLists, *,
+                                   interpret: bool = True) -> jax.Array:
+    """Row-wise membership masks of a's docids in b over a stacked batch.
+
+    ``a``/``b`` leaves must carry ONE leading axis ``[N, ...]`` (flatten a
+    ``[Q, G]`` query x segment batch first); returns
+    int32[N, a.n_blocks * SEG_BLOCK].  One pallas_call, grid over the
+    (query, segment) pairs — the frozen-path conjunction of a whole
+    query batch in a single dispatch.
+    """
+    assert a.firsts.ndim == 2 and b.firsts.ndim == 2, \
+        "stack leaves must be [N, ...]; reshape the (Q, G) batch first"
+    if a.n_blocks == 0 or a.firsts.shape[0] == 0:
+        return jnp.zeros((a.firsts.shape[0], a.n_blocks * SEG_BLOCK),
+                         jnp.int32)
+    return _call_batched(a, b, interpret=interpret)

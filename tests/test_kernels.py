@@ -231,3 +231,64 @@ def test_segment_intersect_mask_edges():
         got = np.asarray(ops.segment_intersect_mask(A, B, interpret=True))
         want = np.asarray(ref.segment_intersect_mask_ref(A, B))
         np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# batched segment_intersect: one grid step per (query, segment) row
+# ---------------------------------------------------------------------------
+from repro.kernels.segment_intersect import (StackedLists, decode_stacked,
+                                             repad_stacked, stack_packed,
+                                             segment_intersect_mask_batched)
+
+
+def _to_jnp(s):
+    return jax.tree.map(jnp.asarray, s)
+
+
+def test_stack_decode_roundtrip_and_repad():
+    """Stacked decode == each list's own decode, through an extra repad
+    (the gather-time bucket growth): values, then INVALID padding."""
+    lists = [_rand_asc(n, 1 << 20) for n in (0, 5, 127, 128, 129, 700, 1)]
+    st = stack_packed([pack_docids(x) for x in lists])
+    st2 = repad_stacked(st, st.n_blocks * 2, st.n_words * 2)
+    for s in (st, st2):
+        dec = np.asarray(decode_stacked(_to_jnp(s)))
+        for g, x in enumerate(lists):
+            np.testing.assert_array_equal(dec[g, : x.size], x)
+            assert np.all(dec[g, x.size:] == 0xFFFFFFFF)
+
+
+@pytest.mark.parametrize("rows", [
+    [(100, 80), (0, 50), (513, 999), (128, 128), (1, 1)],
+    [(300, 300), (50, 1000)],
+])
+def test_segment_intersect_mask_batched(rows):
+    """Grid kernel == vmapped jnp oracle row for row, and each row's
+    mask == the UNBATCHED kernel on that row's own (unpadded) lists —
+    stacking/padding must not change any membership bit."""
+    a_lists = [_rand_asc(na, 1 << 16) for na, _ in rows]
+    b_lists = [_rand_asc(nb, 1 << 16) for _, nb in rows]
+    A = stack_packed([pack_docids(x) for x in a_lists])
+    B = stack_packed([pack_docids(x) for x in b_lists])
+    got = np.asarray(segment_intersect_mask_batched(
+        _to_jnp(A), _to_jnp(B), interpret=True))
+    want = np.asarray(ref.segment_intersect_mask_batched_ref(
+        _to_jnp(A), _to_jnp(B)))
+    np.testing.assert_array_equal(got, want)
+    for g, (a, b) in enumerate(zip(a_lists, b_lists)):
+        single = np.asarray(ops.segment_intersect_mask(
+            pack_docids(a), pack_docids(b), interpret=True))
+        np.testing.assert_array_equal(got[g, : single.shape[0]], single)
+        assert np.all(got[g, single.shape[0]:] == 0)
+        exp = np.isin(a, b).astype(np.int32)
+        np.testing.assert_array_equal(got[g, : a.size], exp)
+
+
+def test_ops_batched_auto_routes_to_ref_on_cpu():
+    a = stack_packed([pack_docids(_rand_asc(100, 1000))])
+    b = stack_packed([pack_docids(_rand_asc(60, 1000))])
+    got = np.asarray(ops.segment_intersect_mask_batched(
+        _to_jnp(a), _to_jnp(b)))   # use_kernel=None -> jnp oracle on CPU
+    want = np.asarray(ref.segment_intersect_mask_batched_ref(
+        _to_jnp(a), _to_jnp(b)))
+    np.testing.assert_array_equal(got, want)
