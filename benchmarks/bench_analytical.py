@@ -7,7 +7,6 @@ indexed segment.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core import analytical

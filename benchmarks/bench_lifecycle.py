@@ -23,13 +23,13 @@ import time
 import numpy as np
 
 from benchmarks import common
-from repro.core import analytical, slicepool
+from repro.core import analytical
 from repro.core.lifecycle import LifecycleEngine
 from repro.core.pointers import PoolLayout
 from repro.data import synth
 
 
-def run(fast: bool = True):
+def run(fast: bool = True, validate: bool = False):
     vocab = 5_000 if fast else 20_000
     docs_per_segment = 1_024 if fast else 4_096
     n_segments = 4 if fast else 6
@@ -50,7 +50,8 @@ def run(fast: bool = True):
     max_len = 1 << max(int(2 * fmax - 1).bit_length(), 3)
 
     life = LifecycleEngine(layout, vocab, docs_per_segment,
-                           max_slices=max_slices, max_len=max_len)
+                           max_slices=max_slices, max_len=max_len,
+                           validate=validate)
     life.ingest(streams[0][:batch])          # warm the jitted scan
     t0 = time.perf_counter()
     high_water = []

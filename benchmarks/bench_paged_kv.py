@@ -10,7 +10,6 @@ validate the analytical waste against the real allocator state.
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core.pointers import PoolLayout

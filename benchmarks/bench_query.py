@@ -34,7 +34,7 @@ from repro.core.pointers import PoolLayout
 from repro.data import synth
 
 
-def _build_engine(fast: bool):
+def _build_engine(fast: bool, validate: bool = False):
     vocab = 4_000 if fast else 16_000
     docs_per_segment = 512 if fast else 2_048
     n_segments = 3          # frozen
@@ -57,7 +57,7 @@ def _build_engine(fast: bool):
     # magnitude and inflate the speedup).
     life = LifecycleEngine(layout, vocab, docs_per_segment,
                            max_slices=max_slices, max_len=max_len,
-                           use_kernel=False)
+                           use_kernel=False, validate=validate)
     for i, docs in enumerate(streams):
         end = docs_per_segment if i < n_segments else docs_per_segment // 2
         for j in range(0, end, batch):
@@ -79,8 +79,8 @@ def _query_pool(freqs, n: int):
     return pool
 
 
-def run(fast: bool = True):
-    life, freqs = _build_engine(fast)
+def run(fast: bool = True, validate: bool = False):
+    life, freqs = _build_engine(fast, validate=validate)
     pool = _query_pool(freqs, 128)
 
     # structural acceptance check: the batched path must never fall back

@@ -8,11 +8,8 @@ from Z'0 -> Z'7.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common
 from repro.core import analytical

@@ -7,7 +7,6 @@ Validates the paper's finding: history-based policies WASTE memory
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from benchmarks.bench_table1 import _batched, _engine_for

@@ -17,10 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import analytical
 from repro.core.index import ActiveSegment
 from repro.core.pointers import PoolLayout
-from repro.core.query import make_engine
 from repro.data import synth
 
 # Paper Table 1 configurations (§9.1)

@@ -2,7 +2,12 @@
 the beyond-paper suites (sharded index, paged-KV transfer, roofline).
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAMES] \
-        [--json PATH] [--repeat N] [--warmup K]
+        [--json PATH] [--repeat N] [--warmup K] [--validate]
+
+``--validate`` threads ``validate=True`` into every suite whose ``run``
+accepts it (the lifecycle-driving suites): the engines then run the
+repro.analysis.invariants structural validators at every rollover and
+any broken allocator/segment invariant fails the suite.
 
 ``--json PATH`` writes per-suite wall times and each suite's returned
 metrics to a machine-readable file (CI uploads ``BENCH_ci.json`` as a
@@ -18,6 +23,7 @@ not jit compilation of a cold process.
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import sys
 import time
@@ -58,6 +64,10 @@ def main(argv=None) -> None:
                     help="timed runs per suite; wall_s is the minimum")
     ap.add_argument("--warmup", type=int, default=0, metavar="K",
                     help="untimed warmup runs per suite (jit compile)")
+    ap.add_argument("--validate", action="store_true",
+                    help="run the structural invariant validators "
+                         "(repro.analysis.invariants) inside every "
+                         "suite that supports them")
     args = ap.parse_args(argv)
     if args.repeat < 1:
         ap.error("--repeat must be >= 1")
@@ -77,13 +87,17 @@ def main(argv=None) -> None:
             # import inside the try so a broken suite module is recorded
             # as a failure instead of aborting the whole harness
             mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+            kw = {"fast": fast}
+            if args.validate and "validate" in \
+                    inspect.signature(mod.run).parameters:
+                kw["validate"] = True
             for _ in range(args.warmup):
                 t_run = time.perf_counter()
-                mod.run(fast=fast)
+                mod.run(**kw)
             walls, best = [], None
             for _ in range(args.repeat):
                 t_run = time.perf_counter()
-                metrics = mod.run(fast=fast)
+                metrics = mod.run(**kw)
                 walls.append(time.perf_counter() - t_run)
                 # keep the metrics of the FASTEST run so wall_s and the
                 # reported docs/s describe the same execution

@@ -1,0 +1,20 @@
+"""Static analysis + runtime sanitizers for the repo's hand-enforced
+policies (the mechanical check every later tentpole is validated
+against).
+
+Three layers, importable independently:
+
+  * :mod:`repro.analysis.lint` — AST repo-policy linter
+    (``python -m repro.analysis.lint src tests benchmarks examples``):
+    compat-import, pltpu-api-surface, donation-rebind,
+    host-sync-in-hot-path.
+  * :mod:`repro.analysis.sanitize` — ``jax.experimental.checkify``
+    wiring (index OOB + NaN + div) behind the ``checked=True`` flag of
+    every ``repro.kernels.ops`` wrapper.
+  * :mod:`repro.analysis.invariants` — host-side structural validators
+    for allocator / frozen-segment / stacked-list state
+    (``check_pool_state`` / ``check_frozen_segment`` /
+    ``check_segment_set`` / ``check_stacked_lists``), wired into the
+    lifecycle engines behind ``validate=True`` and into
+    ``benchmarks.run --validate``.
+"""

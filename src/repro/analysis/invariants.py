@@ -1,0 +1,465 @@
+"""Host-side structural validators for the allocator & segment state.
+
+Usage::
+
+    from repro.analysis import invariants
+
+    rep = invariants.check_pool_state(layout, engine.segments.active.state)
+    assert rep.ok, rep.render()
+    invariants.check_frozen_segment(fz, layout=layout).raise_if_failed()
+
+    # or let the engine self-check at every rollover:
+    eng = LifecycleEngine(..., validate=True)
+
+    # or across a whole bench run:
+    #   PYTHONPATH=src python benchmarks/run.py --validate
+
+Each ``check_*`` returns a :class:`Report` (never raises by itself):
+``ok`` plus a list of :class:`Violation`\\ s naming the field and the
+broken invariant, and a small ``stats`` dict so tests can assert the
+validator actually inspected something (e.g. walked > 0 chains).
+``Report.raise_if_failed()`` converts failures into
+:class:`InvariantViolation` for post-condition use.
+
+Validators run in numpy off the hot path (the same policy as the freeze
+walk and ``release_slices``); they are O(live postings) and meant for
+tests, ``validate=True`` debugging, and bench ``--validate`` sweeps —
+not for per-batch production use.
+
+Invariants enforced (the Goldilocks allocator's bookkeeping, paper
+§3.1–3.3; see ROADMAP "Architecture reference"):
+
+``check_pool_state``
+    Per pool: live-chain slices and free-list entries are DISJOINT and
+    together partition ``[0, watermark)``; free entries unique;
+    watermark/free_count within capacity; chain pool indices
+    non-increasing newest-first along every chain; per-term chain slot
+    count equals ``freq``; ``tail`` null iff ``freq`` zero; sticky
+    ``overflow`` has the right shape.  Accepts sharded ``[S, ...]``
+    states (each shard row is validated independently).  Single-pool
+    layouts cannot link continuation slices (pool 0 has no pointer
+    slot), so there only the reachable tail slice is checked and the
+    partition relaxes to ``live + free <= watermark``.
+``check_frozen_segment``
+    CSR offsets monotone int64 with ``offsets[0] == 0`` and
+    ``offsets[-1] == len(data)``; per-term packed postings strictly
+    increasing; docids within ``[0, n_docs)`` when the segment stores
+    segment-relative docids; per-term ``docid_bounds`` agrees with the
+    data; ``freed_slices`` unique and within pool capacity.
+``check_segment_set``
+    Frozen segments own disjoint ascending docid ranges; the active
+    base continues exactly where the newest frozen segment ends; the
+    set is bounded by ``max_segments``.
+``check_stacked_lists``
+    Byte widths in {1, 2, 4}; ``woffs`` keep every SLAB_WORDS-word DMA
+    in bounds; pad blocks (firsts == INVALID) decode to INVALID; valid
+    lanes decode strictly ascending and pad lanes never sort below the
+    last valid docid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.pointers import NULL, PoolLayout, decode_host
+
+INVALID = 0xFFFFFFFF
+
+
+class InvariantViolation(AssertionError):
+    """A structural invariant of the index state does not hold."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    check: str     # which check_* produced it
+    field: str     # state leaf / structure member at fault
+    message: str
+
+    def render(self) -> str:
+        return f"[{self.check}] {self.field}: {self.message}"
+
+
+@dataclasses.dataclass
+class Report:
+    check: str
+    violations: List[Violation] = dataclasses.field(default_factory=list)
+    stats: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def add(self, field: str, message: str) -> None:
+        self.violations.append(Violation(self.check, field, message))
+
+    def render(self) -> str:
+        if self.ok:
+            return f"[{self.check}] ok ({self.stats})"
+        return "\n".join(v.render() for v in self.violations)
+
+    def raise_if_failed(self) -> "Report":
+        if not self.ok:
+            raise InvariantViolation(self.render())
+        return self
+
+
+def _merge(into: Report, sub: Report, prefix: str) -> None:
+    for v in sub.violations:
+        into.violations.append(Violation(
+            into.check, f"{prefix}{v.field}", v.message))
+    for k, n in sub.stats.items():
+        into.stats[k] = into.stats.get(k, 0) + n
+
+
+# ---------------------------------------------------------------------------
+# check_pool_state
+# ---------------------------------------------------------------------------
+def _check_pool_state_one(layout: PoolLayout, heap, watermark, tail, freq,
+                          free_list, free_count, rep: Report) -> None:
+    P = layout.num_pools
+    V = tail.shape[0]
+    caps = np.asarray(layout.slices_per_pool, np.int64)
+    fb = np.asarray(layout.free_base, np.int64)
+    sizes = np.asarray(layout.slice_sizes, np.int64)
+    # Pool 0 has no previous-pointer slot, so a single-pool layout cannot
+    # link continuation slices: every alloc-on-full ORPHANS the old slice
+    # by design (the paper's §3.3 progression needs P >= 2).  Only the
+    # tail slice of each chain is reachable, its fill level is
+    # ((freq - 1) mod slice_size) + 1, and orphaned slices legitimately
+    # sit inside [0, watermark) outside both live chains and free lists —
+    # so the partition equality relaxes to an upper bound.
+    single_pool = P == 1
+    wm = watermark.astype(np.int64)
+    fc = free_count.astype(np.int64)
+
+    if heap.shape != (layout.total_slots,):
+        rep.add("heap", f"shape {heap.shape} != ({layout.total_slots},)")
+        return
+    if np.any(wm < 0) or np.any(wm > caps):
+        rep.add("watermark", f"outside [0, capacity]: {wm} vs {caps}")
+        return
+    if np.any(fc < 0) or np.any(fc > wm):
+        rep.add("free_count",
+                f"outside [0, watermark]: {fc} vs watermark {wm}")
+        return
+
+    free_sets = []
+    for p in range(P):
+        entries = free_list[fb[p]: fb[p] + fc[p]].astype(np.int64)
+        if entries.size != np.unique(entries).size:
+            rep.add("free_list", f"pool {p}: duplicate free entries")
+        bad = (entries < 0) | (entries >= wm[p])
+        if np.any(bad):
+            rep.add("free_list",
+                    f"pool {p}: {int(bad.sum())} entries outside the "
+                    f"allocated range [0, {wm[p]})")
+        free_sets.append(set(int(e) for e in entries))
+
+    # walk every live chain; collect live slices per pool.
+    live_sets: List[set] = [set() for _ in range(P)]
+    n_chains = 0
+    max_steps = int(np.sum(caps)) + 1   # cycle guard: > total slices
+    for t in np.nonzero(freq > 0)[0]:
+        ptr = int(tail[t])
+        if ptr == int(NULL):
+            rep.add("tail", f"term {t}: freq {int(freq[t])} > 0 but "
+                    "tail is NULL")
+            continue
+        n_chains += 1
+        slots = 0
+        prev_pool = P  # sentinel above every real pool
+        steps = 0
+        while ptr != int(NULL):
+            steps += 1
+            if steps > max_steps:
+                rep.add("tail", f"term {t}: chain exceeds {max_steps} "
+                        "slices — cycle or corrupt previous-pointer")
+                break
+            pool, sl, off = decode_host(layout, ptr)
+            if pool >= P or sl >= wm[pool]:
+                rep.add("tail", f"term {t}: chain slice (pool {pool}, "
+                        f"slice {sl}) outside allocated [0, "
+                        f"{wm[pool] if pool < P else '?'})")
+                break
+            if pool > prev_pool:
+                rep.add("tail", f"term {t}: pool {pool} follows pool "
+                        f"{prev_pool} newest-first — the §3.3 "
+                        "progression never grows backwards")
+            prev_pool = pool
+            live_sets[pool].add(int(sl))
+            start = 1 if pool > 0 else 0
+            slots += int(off) - start + 1
+            base = layout.pool_base[pool] + int(sl) * int(sizes[pool])
+            nxt = int(heap[base]) if pool > 0 else int(NULL)
+            if steps > 1:
+                # every non-tail slice of the chain was full when its
+                # successor was allocated
+                if int(off) != int(sizes[pool]) - 1:
+                    rep.add("tail", f"term {t}: interior chain slice in "
+                            f"pool {pool} is not full (off {int(off)})")
+            ptr = nxt
+        else:
+            want = (((int(freq[t]) - 1) % int(sizes[0])) + 1
+                    if single_pool else int(freq[t]))
+            if slots != want:
+                rep.add("freq", f"term {t}: chain holds {slots} postings "
+                        f"but freq {int(freq[t])} implies {want}")
+
+    for t in np.nonzero(freq == 0)[0]:
+        if int(tail[t]) != int(NULL):
+            rep.add("tail", f"term {t}: freq 0 but tail "
+                    f"{int(tail[t]):#x} != NULL")
+            break   # one is enough; V can be large
+
+    for p in range(P):
+        inter = live_sets[p] & free_sets[p]
+        if inter:
+            rep.add("free_list",
+                    f"pool {p}: {len(inter)} slice(s) BOTH live and on "
+                    f"the free list (e.g. slice {min(inter)}) — "
+                    "use-after-free territory")
+        n_live, n_free = len(live_sets[p]), len(free_sets[p])
+        if single_pool:
+            if n_live + n_free > int(wm[p]):
+                rep.add("watermark",
+                        f"pool {p}: live {n_live} + free {n_free} > "
+                        f"watermark {int(wm[p])} — slices double-counted")
+        elif n_live + n_free != int(wm[p]):
+            rep.add("watermark",
+                    f"pool {p}: live {n_live} + free {n_free} != "
+                    f"watermark {int(wm[p])} — allocated slices leaked "
+                    "or double-counted")
+    rep.stats["chains_walked"] = rep.stats.get("chains_walked", 0) \
+        + n_chains
+    rep.stats["live_slices"] = rep.stats.get("live_slices", 0) \
+        + sum(len(s) for s in live_sets)
+    rep.stats["free_slices"] = rep.stats.get("free_slices", 0) \
+        + sum(len(s) for s in free_sets)
+    rep.stats["vocab"] = int(V)
+
+
+def check_pool_state(layout: PoolLayout, state) -> Report:
+    """Validate a :class:`~repro.core.slicepool.PoolState` (single-shard
+    ``watermark[P]`` or sharded ``watermark[S, P]``)."""
+    rep = Report(check="pool-state")
+    wm = np.asarray(state.watermark)
+    heap = np.asarray(state.heap)
+    tail = np.asarray(state.tail)
+    freq = np.asarray(state.freq)
+    fl = np.asarray(state.free_list)
+    fc = np.asarray(state.free_count)
+    ov = np.asarray(state.overflow)
+    sharded = wm.ndim == 2
+    if sharded:
+        S = wm.shape[0]
+        if ov.shape != (S,):
+            rep.add("overflow", f"sharded state wants bool[{S}], got "
+                    f"shape {ov.shape}")
+        rep.stats["shards"] = S
+        for s in range(S):
+            sub = Report(check=rep.check)
+            _check_pool_state_one(layout, heap[s], wm[s], tail[s],
+                                  freq[s], fl[s], fc[s], sub)
+            _merge(rep, sub, f"shard {s}: ")
+    else:
+        if ov.shape != ():
+            rep.add("overflow", f"single state wants a bool scalar, got "
+                    f"shape {ov.shape}")
+        _check_pool_state_one(layout, heap, wm, tail, freq, fl, fc, rep)
+    # overflow being SET is defined allocator behaviour (inserts become
+    # no-ops), not a structural violation — only its shape is invariant.
+    rep.stats["overflowed"] = int(np.any(ov))
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# check_frozen_segment
+# ---------------------------------------------------------------------------
+def check_frozen_segment(seg, *, layout: Optional[PoolLayout] = None,
+                         relative_docids: bool = True) -> Report:
+    """Validate one :class:`~repro.core.segments.FrozenSegment` CSR.
+
+    ``relative_docids=False`` for shard members of a
+    ``ShardedFrozenSegment`` (their docids are global-within-segment via
+    ``docid_map`` and legitimately exceed the shard-local ``n_docs``).
+    """
+    from repro.core import postings as post
+
+    rep = Report(check="frozen-segment")
+    offsets = np.asarray(seg.offsets)
+    data = np.asarray(seg.data)
+    V = offsets.shape[0] - 1
+    if offsets.dtype != np.int64:
+        rep.add("offsets", f"dtype {offsets.dtype} != int64")
+    if offsets.size == 0 or offsets[0] != 0:
+        rep.add("offsets", "offsets[0] != 0")
+        return rep
+    d = np.diff(offsets)
+    if np.any(d < 0):
+        t = int(np.argmax(d < 0))
+        rep.add("offsets", f"non-monotone at term {t}: "
+                f"{int(offsets[t])} -> {int(offsets[t + 1])}")
+        return rep
+    if int(offsets[-1]) != data.size:
+        rep.add("offsets", f"offsets[-1] {int(offsets[-1])} != "
+                f"len(data) {data.size}")
+        return rep
+
+    shift = np.uint32(post.POS_BITS)
+    docids = (data >> shift).astype(np.int64)
+    n_terms = 0
+    for t in np.nonzero(d > 0)[0]:
+        a, b = int(offsets[t]), int(offsets[t + 1])
+        chunk = data[a:b].astype(np.int64)
+        n_terms += 1
+        if np.any(np.diff(chunk) <= 0):
+            rep.add("data", f"term {t}: packed postings not strictly "
+                    "increasing (docid/pos order broken)")
+        cnt, first, last = seg.docid_bounds(int(t))
+        if cnt != b - a or first != int(docids[a]) \
+                or last != int(docids[b - 1]):
+            rep.add("docid_bounds", f"term {t}: bounds ({cnt}, {first}, "
+                    f"{last}) disagree with data "
+                    f"({b - a}, {int(docids[a])}, {int(docids[b - 1])})")
+    if relative_docids and data.size:
+        if int(docids.max()) >= int(seg.n_docs) or int(docids.min()) < 0:
+            rep.add("data", f"docid {int(docids.max())} outside "
+                    f"[0, n_docs={int(seg.n_docs)})")
+    freed = getattr(seg, "freed_slices", None)
+    if freed is not None:
+        for p, sl in enumerate(freed):
+            sl = np.asarray(sl)
+            if sl.size != np.unique(sl).size:
+                rep.add("freed_slices", f"pool {p}: duplicate slice — "
+                        "would double-release")
+            if layout is not None and sl.size and (
+                    int(sl.min()) < 0
+                    or int(sl.max()) >= layout.slices_per_pool[p]):
+                rep.add("freed_slices", f"pool {p}: slice index outside "
+                        f"[0, {layout.slices_per_pool[p]})")
+    rep.stats["terms_checked"] = n_terms
+    rep.stats["postings"] = int(data.size)
+    rep.stats["vocab"] = int(V)
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# check_segment_set
+# ---------------------------------------------------------------------------
+def check_segment_set(segset, *,
+                      layout: Optional[PoolLayout] = None) -> Report:
+    """Validate a ``SegmentSet``/``ShardedSegmentSet``-shaped object
+    (``frozen`` list + ``_doc_base`` + ``max_segments``): disjoint
+    ascending frozen docid ranges, active base continuing the newest
+    frozen segment, bounded set size.  Each member segment is validated
+    too (sharded members shard-by-shard)."""
+    rep = Report(check="segment-set")
+    frozen = list(segset.frozen)
+    if len(frozen) > int(segset.max_segments) - 1:
+        rep.add("frozen", f"{len(frozen)} frozen segments exceed "
+                f"max_segments - 1 = {int(segset.max_segments) - 1}")
+    prev_end = None
+    for i, fz in enumerate(frozen):
+        base, n = int(fz.doc_base), int(fz.n_docs)
+        if n < 0:
+            rep.add("frozen", f"segment {i}: negative n_docs {n}")
+        if prev_end is not None and base < prev_end:
+            rep.add("frozen", f"segment {i}: doc_base {base} overlaps "
+                    f"previous segment's range ending at {prev_end}")
+        prev_end = base + n
+        shards = getattr(fz, "shards", None)
+        if shards is None:
+            _merge(rep, check_frozen_segment(fz, layout=layout),
+                   f"segment {i}: ")
+        else:
+            for s, sh in enumerate(shards):
+                _merge(rep, check_frozen_segment(
+                    sh, layout=layout, relative_docids=False),
+                    f"segment {i} shard {s}: ")
+    if frozen and int(segset._doc_base) != prev_end:
+        rep.add("_doc_base", f"active doc_base {int(segset._doc_base)} "
+                f"!= newest frozen end {prev_end} — ranges must tile")
+    rep.stats["segments"] = len(frozen)
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# check_stacked_lists
+# ---------------------------------------------------------------------------
+def check_stacked_lists(s, *, decode: bool = True) -> Report:
+    """Validate a :class:`~repro.kernels.segment_intersect.StackedLists`
+    (any leading shape): legal byte widths, in-bounds DMA windows, pad
+    blocks decoding to INVALID, ascending valid lanes."""
+    from repro.kernels.segment_intersect import (SEG_BLOCK, SLAB_WORDS,
+                                                 decode_stacked)
+
+    rep = Report(check="stacked-lists")
+    firsts = np.asarray(s.firsts)
+    bws = np.asarray(s.bws)
+    woffs = np.asarray(s.woffs)
+    payload = np.asarray(s.payload)
+    ns = np.asarray(s.ns)
+    NB = firsts.shape[-1]
+    PW = payload.shape[-1]
+    rows = int(np.prod(firsts.shape[:-1], dtype=np.int64)) \
+        if firsts.ndim > 1 else 1
+    f2 = firsts.reshape(rows, NB)
+    b2 = bws.reshape(rows, NB)
+    w2 = woffs.reshape(rows, NB)
+    p2 = payload.reshape(rows, PW)
+    n2 = ns.reshape(rows)
+
+    if not np.isin(b2, (1, 2, 4)).all():
+        rep.add("bws", f"byte widths outside {{1,2,4}}: "
+                f"{sorted(set(np.unique(b2).tolist()) - {1, 2, 4})}")
+    if np.any(n2 < 0) or np.any(n2 > NB * SEG_BLOCK):
+        rep.add("ns", f"valid counts outside [0, {NB * SEG_BLOCK}]")
+    if np.any(w2 < 0) or np.any(w2 > PW - SLAB_WORDS):
+        rep.add("woffs", f"word offsets outside [0, {PW - SLAB_WORDS}] "
+                f"— a {SLAB_WORDS}-word block DMA would overrun the "
+                "payload")
+        return rep   # decoding would index OOB; stop here
+
+    n_pad_blocks = 0
+    for r in range(rows):
+        pad = f2[r] == INVALID
+        n_pad_blocks += int(pad.sum())
+        for b in np.nonzero(pad)[0]:
+            w = int(w2[r, b])
+            plane = p2[r, w: w + 32 * int(b2[r, b])]
+            if np.any(plane != 0):
+                rep.add("payload", f"row {r} block {int(b)}: pad block "
+                        "gap plane is non-zero — would decode to "
+                        "non-INVALID ghost docids")
+    if decode:
+        lanes = np.asarray(decode_stacked(s)).reshape(rows, -1)
+        lane64 = lanes.astype(np.int64)
+        for r in range(rows):
+            n = int(n2[r])
+            if n > 1 and np.any(np.diff(lane64[r, :n]) <= 0):
+                rep.add("payload", f"row {r}: decoded valid lanes not "
+                        "strictly ascending")
+            if n < lanes.shape[1]:
+                floor = lane64[r, n - 1] if n else -1
+                if np.any(lane64[r, n:] < floor):
+                    rep.add("payload", f"row {r}: pad lane decodes "
+                            "below the last valid docid — would corrupt "
+                            "the two-pointer walk")
+        # full pad blocks must decode to exactly INVALID
+        lb = lanes.reshape(rows, NB, SEG_BLOCK)
+        bad = (f2 == INVALID) & np.any(lb != np.uint32(INVALID), axis=2)
+        if np.any(bad):
+            r, b = [int(x[0]) for x in np.nonzero(bad)]
+            rep.add("payload", f"row {r} block {b}: pad block decodes "
+                    "to non-INVALID lanes")
+    rep.stats["rows"] = rows
+    rep.stats["pad_blocks"] = n_pad_blocks
+    return rep
+
+
+__all__ = ["InvariantViolation", "Violation", "Report",
+           "check_pool_state", "check_frozen_segment",
+           "check_segment_set", "check_stacked_lists"]

@@ -7,15 +7,14 @@ shardable, never allocated (the dry-run pattern).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import lm_archs, other_archs
 from repro.configs.base import (GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
-                                GNNConfig, LMConfig, RecsysConfig, ShapeSpec)
+                                RecsysConfig, ShapeSpec)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -14,7 +14,8 @@ float64-ish numpy on host (these run once per config, not per token).
 from __future__ import annotations
 
 import math
-from typing import Sequence, Tuple
+
+from typing import Tuple
 
 import numpy as np
 

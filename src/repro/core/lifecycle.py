@@ -206,6 +206,7 @@ class _LifecycleBase:
     use_kernel: bool
     interpret: Optional[bool]
     batched: bool
+    validate: bool
 
     def _init_shell(self, batched_kernel: Optional[bool]) -> None:
         self._packed: List[PackedSegment] = []
@@ -235,6 +236,22 @@ class _LifecycleBase:
                 self.layout, st)
             self.stats.live_slots = slicepool.memory_slots_used(
                 self.layout, st)
+            if self.validate:
+                self.validate_invariants()
+
+    def validate_invariants(self) -> None:
+        """Run the repro.analysis.invariants structural validators over
+        the allocator state and every frozen segment; raise
+        :class:`~repro.analysis.invariants.InvariantViolation` on the
+        first broken invariant.  Called automatically at every rollover
+        when the engine was built with ``validate=True`` (debug flag —
+        each call is an O(live postings) host walk, keep it off the
+        production ingest path)."""
+        from repro.analysis import invariants
+        invariants.check_pool_state(
+            self.layout, self.segments.active.state).raise_if_failed()
+        invariants.check_segment_set(
+            self.segments, layout=self.layout).raise_if_failed()
 
     def _sync_frozen(self) -> None:
         by_id = {id(p.seg): p for p in self._packed}
@@ -457,7 +474,8 @@ class LifecycleEngine(_LifecycleBase):
                  interpret: Optional[bool] = None,
                  bulk_ingest: bool = True,
                  batched: bool = True,
-                 batched_kernel: Optional[bool] = None):
+                 batched_kernel: Optional[bool] = None,
+                 validate: bool = False):
         self.layout = layout
         self.vocab_size = vocab_size
         self.max_slices = max_slices
@@ -466,6 +484,7 @@ class LifecycleEngine(_LifecycleBase):
         self.use_kernel = use_kernel
         self.interpret = interpret
         self.batched = batched
+        self.validate = validate
         self.segments = seg_mod.SegmentSet(
             layout, vocab_size, docs_per_segment, max_segments=max_segments,
             bulk_ingest=bulk_ingest)
@@ -525,7 +544,8 @@ class ShardedLifecycleEngine(_LifecycleBase):
                  interpret: Optional[bool] = None,
                  bulk_ingest: bool = True,
                  batched: bool = True,
-                 batched_kernel: Optional[bool] = None):
+                 batched_kernel: Optional[bool] = None,
+                 validate: bool = False):
         self.layout = layout
         self.vocab_size = vocab_size
         self.max_slices = max_slices
@@ -534,6 +554,7 @@ class ShardedLifecycleEngine(_LifecycleBase):
         self.use_kernel = use_kernel
         self.interpret = interpret
         self.batched = batched
+        self.validate = validate
         self.segments = shx.ShardedSegmentSet(
             layout, vocab_size, docs_per_segment, mesh, rules=rules,
             max_segments=max_segments, bulk_ingest=bulk_ingest)

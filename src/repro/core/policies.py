@@ -16,7 +16,6 @@ from __future__ import annotations
 from typing import Callable, Dict, Tuple
 
 import jax.numpy as jnp
-import numpy as np
 
 
 def sp_default(z: Tuple[int, ...], hist):

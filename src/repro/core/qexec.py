@@ -227,8 +227,11 @@ def frozen_merge(active_desc, active_n, lists: StackedLists, n_terms,
     if kind == "conjunctive":
         hit01 = None
         if kernel and nt_slots >= 2:
-            flat = lambda x: x[:, 0].reshape((Q * G,) + x.shape[3:])
-            flatb = lambda x: x[:, 1].reshape((Q * G,) + x.shape[3:])
+            def flat(x):
+                return x[:, 0].reshape((Q * G,) + x.shape[3:])
+
+            def flatb(x):
+                return x[:, 1].reshape((Q * G,) + x.shape[3:])
             a_st = StackedLists(*[flat(getattr(lists, f))
                                   for f in StackedLists._fields[:-1]],
                                 ns=lists.ns[:, 0].reshape(Q * G))
@@ -245,7 +248,9 @@ def frozen_merge(active_desc, active_n, lists: StackedLists, n_terms,
 
         if hit01 is None:
             hit01 = jnp.zeros((Q, G, W), bool)  # unused placeholder
-            per_seg_ = lambda i, s, nt, h: per_seg(i, s, nt, None)
+
+            def per_seg_(i, s, nt, h):
+                return per_seg(i, s, nt, None)
         else:
             per_seg_ = per_seg
         per_q = jax.vmap(per_seg_, in_axes=(1, 1, None, 0))

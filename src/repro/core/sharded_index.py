@@ -363,10 +363,10 @@ class ShardedFrozenSegment:
         across shards bound the merged list)."""
         n, first, last = 0, 0, 0
         for fz in self.shards:
-            c, f, l = fz.docid_bounds(term)
+            c, lo, hi = fz.docid_bounds(term)
             if c:
-                first = f if n == 0 else min(first, f)
-                last = l if n == 0 else max(last, l)
+                first = lo if n == 0 else min(first, lo)
+                last = hi if n == 0 else max(last, hi)
                 n += c
         return n, first, last
 

@@ -5,11 +5,21 @@ the kernel bodies in Python for correctness); on a TPU backend the same
 calls compile to Mosaic.  The jnp oracles live in ref.py and back both the
 allclose tests and the dry-run lowering path (DESIGN.md: kernels are the
 TPU target, the jnp path is the semantics).
+
+``checked=True`` on the postings/segment/bulk wrappers runs the call
+under ``jax.experimental.checkify`` (index OOB + NaN + div, via
+repro.analysis.sanitize) and raises ``sanitize.SanitizerError`` on the
+first violation.  checkify cannot functionalize an interpret-mode
+``pallas_call`` on this JAX, so the checked route always sanitizes the
+jnp oracle — which IS the semantics — regardless of ``use_kernel``/
+``interpret``.  CI's checked leg runs the kernel-equivalence suite this
+way (REPRO_CHECKED=1).
 """
 from __future__ import annotations
 
 import jax
 
+from repro.analysis import sanitize
 from repro.kernels import ref
 from repro.kernels.bulk_append import bulk_append as _bulk_append
 from repro.kernels.embedding_bag import embedding_bag as _embedding_bag
@@ -41,27 +51,36 @@ def embedding_bag(table, indices, offsets, *, mode: str = "sum",
                           interpret=interpret)
 
 
-def intersect_mask(a, b, *, ta: int = 256, tb: int = 256, interpret=None):
+def intersect_mask(a, b, *, ta: int = 256, tb: int = 256, interpret=None,
+                   checked: bool = False):
+    if checked:
+        return sanitize.checked_call(ref.intersect_mask_ref, a, b)
     if interpret is None:
         interpret = _default_interpret()
     return _intersect_mask(a, b, ta=ta, tb=tb, interpret=interpret)
 
 
-def segment_intersect_mask(a, b, *, interpret=None):
+def segment_intersect_mask(a, b, *, interpret=None,
+                           checked: bool = False):
     """Fused gap-decode + intersection of two PackedLists (frozen path)."""
+    if checked:
+        return sanitize.checked_call(ref.segment_intersect_mask_ref, a, b)
     if interpret is None:
         interpret = _default_interpret()
     return _segment_intersect_mask(a, b, interpret=interpret)
 
 
 def segment_intersect_mask_batched(a, b, *, use_kernel=None,
-                                   interpret=None):
+                                   interpret=None, checked: bool = False):
     """Row-wise masks of a whole (query, segment) batch of StackedLists.
 
     ``use_kernel=None`` auto-routes like :func:`bulk_append`: the grid
     kernel on a real TPU backend, the vmapped jnp oracle everywhere else
     (the batched query hot path must not pay the interpreter's
     per-element DMA simulation on CPU; the oracle IS the semantics)."""
+    if checked:
+        return sanitize.checked_call(
+            ref.segment_intersect_mask_batched_ref, a, b)
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if not use_kernel:
@@ -73,13 +92,26 @@ def segment_intersect_mask_batched(a, b, *, use_kernel=None,
 
 def bulk_append(heap, tail, freq, post_addr, post_val, ptr_addr, ptr_val,
                 term_idx, term_tail, term_freq, *, use_kernel=None,
-                interpret=None):
+                interpret=None, checked: bool = False):
     """Fused scatter-append of one ingest batch into (heap, tail, freq).
 
     ``use_kernel=None`` auto-routes: the Pallas kernel on a real TPU
     backend, the jnp oracle everywhere else (the ingest hot path must not
     pay the interpreter's per-element DMA simulation on CPU; the oracle
-    IS the semantics — see ref.bulk_append_ref)."""
+    IS the semantics — see ref.bulk_append_ref).
+
+    ``checked=True`` is STRICTER than the drop contract: checkify's
+    index checks flag out-of-bounds scatter addresses even under
+    ``mode="drop"``, and the allocator deliberately encodes skip lanes
+    as out-of-range addresses — so the checked path asserts that every
+    lane of the batch actually landed (no silently skipped writes).
+    Expect :class:`~repro.analysis.sanitize.SanitizerError` on any
+    operand set with skip lanes; use it to audit batches that are
+    supposed to be fully dense."""
+    if checked:
+        return sanitize.checked_call(
+            ref.bulk_append_ref, heap, tail, freq, post_addr, post_val,
+            ptr_addr, ptr_val, term_idx, term_tail, term_freq)
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if not use_kernel:

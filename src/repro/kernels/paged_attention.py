@@ -60,7 +60,7 @@ def _kernel(table_ref, len_ref, q_ref, k_hbm, v_hbm, o_ref,
         start_copy(0, 0)
 
     def body(i, carry):
-        m, l, acc = carry
+        m, denom, acc = carry
         slot = jax.lax.rem(i, nbuf)
 
         @pl.when(i + 1 < n_pages)
@@ -77,15 +77,15 @@ def _kernel(table_ref, len_ref, q_ref, k_hbm, v_hbm, o_ref,
         m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new)
-        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        denom = denom * alpha + jnp.sum(p, axis=-1, keepdims=True)
         acc = acc * alpha + p @ v
-        return m_new, l, acc
+        return m_new, denom, acc
 
     m0 = jnp.full((G, 1), NEG_INF, jnp.float32)
     l0 = jnp.zeros((G, 1), jnp.float32)
     a0 = jnp.zeros((G, D), jnp.float32)
-    m, l, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, a0))
-    o_ref[0, 0] = acc / jnp.maximum(l, 1e-30)
+    m, denom, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, a0))
+    o_ref[0, 0] = acc / jnp.maximum(denom, 1e-30)
 
 
 @functools.partial(jax.jit, static_argnames=("page", "interpret"))

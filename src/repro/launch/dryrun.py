@@ -17,7 +17,6 @@ import jax.numpy as jnp    # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import registry                          # noqa: E402
-from repro.configs.base import LMConfig                     # noqa: E402
 from repro.dist.sharding import Rules, tree_shardings, use_rules  # noqa: E402
 from repro.launch import mesh as mesh_lib                   # noqa: E402
 from repro.launch import roofline as RL                     # noqa: E402

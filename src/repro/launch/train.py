@@ -16,7 +16,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.configs.base import LMConfig

@@ -19,8 +19,6 @@ Implementation notes (scale-driven):
 """
 from __future__ import annotations
 
-import dataclasses
-import math
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -238,8 +236,9 @@ def lm_forward(params, tokens, cfg: LMConfig, q_chunk: int = 512):
 
     def run_block(x, p, window):
         p = jax.tree.map(lambda a: a.astype(cdt), p)
-        blk = lambda xx: block_forward(p, xx, cfg, window=window,
-                                       positions=positions, q_chunk=q_chunk)
+        def blk(xx):
+            return block_forward(p, xx, cfg, window=window,
+                                 positions=positions, q_chunk=q_chunk)
         if cfg.remat:
             blk = jax.checkpoint(blk)
         return blk(x)
@@ -299,9 +298,10 @@ def lm_prefill(params, tokens, cfg: LMConfig, q_chunk: int = 512):
 
     def run_block(x, p, window, kv_keep):
         p = jax.tree.map(lambda a: a.astype(cdt), p)
-        blk = lambda xx: block_forward(
-            p, xx, cfg, window=window, positions=positions,
-            q_chunk=q_chunk, return_kv=True, kv_keep=kv_keep)
+        def blk(xx):
+            return block_forward(
+                p, xx, cfg, window=window, positions=positions,
+                q_chunk=q_chunk, return_kv=True, kv_keep=kv_keep)
         if cfg.remat:
             blk = jax.checkpoint(blk)
         return blk(x)
@@ -530,7 +530,8 @@ def lm_decode_step(params, cache: DecodeCache, token, pos, cfg: LMConfig):
             cfg, group, x, (loc, kl, vl, kls, vls,
                             params["global_layers"], cache.k, cache.v,
                             _sc(cache.k_sc), _sc(cache.v_sc)))
-        back = lambda a: a.reshape(-1, *a.shape[2:])
+        def back(a):
+            return a.reshape(-1, *a.shape[2:])
         cache = DecodeCache(
             k=kg, v=vg, k_loc=back(kl), v_loc=back(vl),
             k_sc=kgs if quant else None, v_sc=vgs if quant else None,

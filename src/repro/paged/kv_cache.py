@@ -114,7 +114,6 @@ def make_append_fn(cfg: PagedKVConfig):
 
     @jax.jit
     def append(state: PagedKVState, seq_ids, k, v) -> PagedKVState:
-        B = seq_ids.shape[0]
         t = state.tail[seq_ids]
         new = ptr_mod.is_null(t)
         pool, sl, off = ptr_mod.decode(tbl, pb, t)

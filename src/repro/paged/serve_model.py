@@ -15,8 +15,8 @@ attend full here — window eviction is a TODO recorded in DESIGN.md).
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Tuple
+
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

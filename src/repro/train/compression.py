@@ -71,8 +71,7 @@ def compressed_psum(tree, axis_name: str):
         acc = jax.lax.psum(q.astype(jnp.int32) * 1, axis_name)
         # max scale across shards keeps dequant conservative
         s = jax.lax.pmax(scale, axis_name)
-        n = jax.lax.psum(1, axis_name)
-        del n
+        _ = jax.lax.psum(1, axis_name)
         return acc.astype(jnp.float32) * s
 
     return jax.tree.map(one, tree)

@@ -33,7 +33,8 @@ class AdamW:
         return jnp.dtype(self.moment_dtype) if self.moment_dtype else p.dtype
 
     def init(self, params) -> AdamWState:
-        zeros = lambda p: jnp.zeros(p.shape, self._mdt(p))
+        def zeros(p):
+            return jnp.zeros(p.shape, self._mdt(p))
         return AdamWState(step=jnp.zeros((), jnp.int32),
                           mu=jax.tree.map(zeros, params),
                           nu=jax.tree.map(zeros, params))

@@ -9,8 +9,8 @@ Distributed-optimization features live here:
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

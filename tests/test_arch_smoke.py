@@ -9,7 +9,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import registry
-from repro.models import recsys as R
 from repro.models import schnet as G
 from repro.models import transformer as T
 from repro.train.optimizer import AdamW

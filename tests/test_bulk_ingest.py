@@ -11,9 +11,9 @@ checked against its jnp oracle on the same operands.
 """
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.analysis import invariants
 from repro.core import segments, slicepool
 from repro.core.pointers import PoolLayout
 
@@ -63,13 +63,17 @@ def run_both(layout, vocab, batches, start_pools_per_term=None,
             s1 = slicepool.release_slices(layout, s1, fz.freed_slices)
             s2 = slicepool.release_slices(layout, s2, fz.freed_slices)
             assert_states_equal(s1, s2, f"release after batch {bi}")
+    # post-condition: whatever the stream did (overflow, releases,
+    # recycling), the allocator bookkeeping must still partition every
+    # pool into live chains + free list (repro.analysis.invariants).
+    invariants.check_pool_state(layout, s1).raise_if_failed()
+    invariants.check_pool_state(layout, s2).raise_if_failed()
     return s1, s2
 
 
 @st.composite
 def stream(draw):
     li = draw(st.integers(0, len(LAYOUTS) - 1))
-    layout = LAYOUTS[li]
     vocab = draw(st.sampled_from([1, 2, 5, 9]))
     n_batches = draw(st.integers(1, 4))
     seed = draw(st.integers(0, 2**31 - 1))

@@ -1,0 +1,105 @@
+"""benchmarks/check_regression.py unit tests: the CI perf guard must
+fail on a >threshold regression, pass within threshold, skip cleanly on
+missing baselines/metrics, and pick the newest BENCH_pr<N>.json."""
+import json
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+
+def _report(ingest=None, query=None, ok=True):
+    suites = {}
+    if ingest is not None:
+        suites["ingest"] = {"ok": ok, "metrics": ingest}
+    if query is not None:
+        suites["query"] = {"ok": ok, "metrics": query}
+    return {"suites": suites}
+
+
+BASE = _report(
+    ingest={"bulk_docs_s": 1000.0, "bulk_vs_scan_speedup": 10.0},
+    query={"batched_ms_per_q_q128": 2.0})
+
+
+def test_regression_detected_over_threshold():
+    """A 40% docs/s drop (higher-is-better) and a 40% latency rise
+    (lower-is-better) both fail at the default 30% threshold."""
+    cur = _report(
+        ingest={"bulk_docs_s": 600.0, "bulk_vs_scan_speedup": 10.0},
+        query={"batched_ms_per_q_q128": 2.8})
+    failures, lines = cr.compare(cur, BASE, threshold=0.30)
+    assert failures == ["ingest.bulk_docs_s",
+                        "query.batched_ms_per_q_q128"]
+    assert sum("FAIL" in ln for ln in lines) == 2
+
+
+def test_pass_within_threshold_and_improvements():
+    """A 20% drop stays under the 30% bar; improvements never fail even
+    when huge (a 10x latency drop is not a 'change' regression)."""
+    cur = _report(
+        ingest={"bulk_docs_s": 800.0, "bulk_vs_scan_speedup": 30.0},
+        query={"batched_ms_per_q_q128": 0.2})
+    failures, lines = cr.compare(cur, BASE, threshold=0.30)
+    assert failures == []
+    assert all("FAIL" not in ln for ln in lines)
+
+
+def test_missing_metric_skips_not_fails():
+    """Either side lacking a guarded metric (suite missing, suite not
+    ok, or key absent) is a skip — the guard must never block
+    adding/removing suites."""
+    cur = _report(ingest={"bulk_docs_s": 1.0})   # no speedup, no query
+    failures, lines = cr.compare(cur, BASE, threshold=0.30)
+    assert "ingest.bulk_docs_s" in failures      # real regression kept
+    assert sum("skip" in ln for ln in lines) == 2
+    # a failed suite's metrics don't count either
+    bad = {"suites": {"ingest": {"ok": False,
+                                 "metrics": {"bulk_docs_s": 9e9}}}}
+    failures, lines = cr.compare(bad, BASE, threshold=0.30)
+    assert failures == []
+    assert all("skip" in ln for ln in lines)
+
+
+def test_metric_helper_type_guards():
+    assert cr.metric(BASE, "ingest", "bulk_docs_s") == 1000.0
+    assert cr.metric(BASE, "nope", "x") is None
+    assert cr.metric({"suites": {"ingest": {"ok": True, "metrics":
+                                            {"bulk_docs_s": "fast"}}}},
+                     "ingest", "bulk_docs_s") is None
+
+
+def test_newest_baseline_picks_highest_pr(tmp_path):
+    for n in (2, 10, 9):
+        (tmp_path / f"BENCH_pr{n}.json").write_text("{}")
+    (tmp_path / "BENCH_ci.json").write_text("{}")     # not a baseline
+    assert cr.newest_baseline(str(tmp_path)).endswith("BENCH_pr10.json")
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert cr.newest_baseline(str(empty)) is None
+
+
+def test_main_missing_baseline_is_a_noop(tmp_path, capsys):
+    cur = tmp_path / "BENCH_ci.json"
+    cur.write_text(json.dumps(BASE))
+    cr.main([str(cur), "--baseline-dir", str(tmp_path)])   # no exit
+    assert "nothing to guard" in capsys.readouterr().out
+
+
+def test_main_exits_1_on_regression(tmp_path, capsys):
+    (tmp_path / "BENCH_pr1.json").write_text(json.dumps(BASE))
+    cur = tmp_path / "BENCH_ci.json"
+    cur.write_text(json.dumps(_report(
+        ingest={"bulk_docs_s": 100.0}, query=None)))
+    with pytest.raises(SystemExit) as ei:
+        cr.main([str(cur), "--baseline-dir", str(tmp_path)])
+    assert ei.value.code == 1
+    assert "REGRESSED" in capsys.readouterr().out
+
+
+def test_main_passes_clean_run(tmp_path, capsys):
+    (tmp_path / "BENCH_pr1.json").write_text(json.dumps(BASE))
+    cur = tmp_path / "BENCH_ci.json"
+    cur.write_text(json.dumps(BASE))
+    cr.main([str(cur), "--baseline-dir", str(tmp_path)])
+    assert "no regressions" in capsys.readouterr().out

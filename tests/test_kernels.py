@@ -1,5 +1,7 @@
 """Pallas kernels vs jnp oracles: shape/dtype sweeps in interpret mode
 (spec deliverable c)."""
+import os
+
 import numpy as np
 import pytest
 
@@ -11,12 +13,17 @@ from repro.kernels.paged_attention import PAGE
 
 RNG = np.random.default_rng(0)
 
+# REPRO_CHECKED=1 (CI's checked leg) reruns every postings/segment ops.*
+# call under the checkify sanitizer (repro.analysis.sanitize: index OOB
+# + NaN + div) — same expected outputs, instrumented oracle path.
+CHECKED = bool(int(os.environ.get("REPRO_CHECKED", "0")))
+
 
 # ---------------------------------------------------------------------------
 # paged_attention
 # ---------------------------------------------------------------------------
 def _paged_case(B, Hkv, G, D, lens, dtype, n_free_pages=64):
-    n_pages_each = [-(-l // PAGE) if l else 0 for l in lens]
+    n_pages_each = [-(-n // PAGE) if n else 0 for n in lens]
     NP = max(max(n_pages_each), 1)
     perm = RNG.permutation(n_free_pages)
     table = np.full((B, NP), -1, np.int32)
@@ -141,7 +148,8 @@ def test_intersect_mask(na, nb, ta, tb):
     a = _pad_asc(RNG.choice(4 * na, na // 2, replace=False), na)
     b = _pad_asc(RNG.choice(4 * na, nb // 3, replace=False), nb)
     out = ops.intersect_mask(jnp.asarray(a), jnp.asarray(b),
-                             ta=ta, tb=tb, interpret=True)
+                             ta=ta, tb=tb, interpret=True,
+                             checked=CHECKED)
     expect = ref.intersect_mask_ref(jnp.asarray(a), jnp.asarray(b))
     np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
 
@@ -153,7 +161,7 @@ def test_intersect_mask_edges():
     hi = _pad_asc(np.arange(1000, 1100), 256)
     for a, b in [(empty, full), (full, empty), (full, hi), (full, full)]:
         out = ops.intersect_mask(jnp.asarray(a), jnp.asarray(b),
-                                 interpret=True)
+                                 interpret=True, checked=CHECKED)
         expect = ref.intersect_mask_ref(jnp.asarray(a), jnp.asarray(b))
         np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
 
@@ -164,7 +172,7 @@ def test_intersect_mask_used_by_query_engine():
     a = _pad_asc(RNG.choice(500, 80, replace=False), 256)
     b = _pad_asc(RNG.choice(500, 120, replace=False), 256)
     mask = ops.intersect_mask(jnp.asarray(a), jnp.asarray(b),
-                              interpret=True)
+                              interpret=True, checked=CHECKED)
     got, n_got = _compact(jnp.asarray(a), mask.astype(bool))
     want, n_want = intersect_asc(jnp.asarray(a), 80, jnp.asarray(b), 120)
     assert int(n_got) == int(n_want)
@@ -214,7 +222,8 @@ def test_segment_intersect_mask(na, nb, hi):
     a = _rand_asc(na, hi)
     b = _rand_asc(nb, hi)
     A, B = pack_docids(a), pack_docids(b)
-    got = np.asarray(ops.segment_intersect_mask(A, B, interpret=True))
+    got = np.asarray(ops.segment_intersect_mask(A, B, interpret=True,
+                                                checked=CHECKED))
     want = np.asarray(ref.segment_intersect_mask_ref(A, B))
     np.testing.assert_array_equal(got, want)
     hits = np.asarray(decode_packed(A))[:na][got[:na].astype(bool)]
@@ -228,7 +237,8 @@ def test_segment_intersect_mask_edges():
     for a, b in [(empty, full), (full, empty), (full, hi), (full, full),
                  (hi, hi)]:
         A, B = pack_docids(a), pack_docids(b)
-        got = np.asarray(ops.segment_intersect_mask(A, B, interpret=True))
+        got = np.asarray(ops.segment_intersect_mask(A, B, interpret=True,
+                                                    checked=CHECKED))
         want = np.asarray(ref.segment_intersect_mask_ref(A, B))
         np.testing.assert_array_equal(got, want)
 
@@ -236,7 +246,7 @@ def test_segment_intersect_mask_edges():
 # ---------------------------------------------------------------------------
 # batched segment_intersect: one grid step per (query, segment) row
 # ---------------------------------------------------------------------------
-from repro.kernels.segment_intersect import (StackedLists, decode_stacked,
+from repro.kernels.segment_intersect import (decode_stacked,
                                              repad_stacked, stack_packed,
                                              segment_intersect_mask_batched)
 
@@ -288,7 +298,8 @@ def test_ops_batched_auto_routes_to_ref_on_cpu():
     a = stack_packed([pack_docids(_rand_asc(100, 1000))])
     b = stack_packed([pack_docids(_rand_asc(60, 1000))])
     got = np.asarray(ops.segment_intersect_mask_batched(
-        _to_jnp(a), _to_jnp(b)))   # use_kernel=None -> jnp oracle on CPU
+        _to_jnp(a), _to_jnp(b),    # use_kernel=None -> jnp oracle on CPU
+        checked=CHECKED))
     want = np.asarray(ref.segment_intersect_mask_batched_ref(
         _to_jnp(a), _to_jnp(b)))
     np.testing.assert_array_equal(got, want)

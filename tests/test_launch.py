@@ -2,7 +2,6 @@
 ring formulas, model-flops accounting.  (The 512-device dry-run itself
 runs as its own process — see launch/dryrun.py and EXPERIMENTS.md.)
 """
-import numpy as np
 import pytest
 
 from repro.launch import roofline as RL

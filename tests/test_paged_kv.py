@@ -1,13 +1,12 @@
 """Paged KV cache (slice-pool allocator applied to serving): allocator
 invariants, chain->page-table flattening, attention equivalence."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.pointers import PoolLayout
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.paged import kv_cache as P
 
 LAYOUT = PoolLayout(z=(6, 8, 10), slices_per_pool=(64, 32, 16))
@@ -140,7 +139,6 @@ def test_goldilocks_tradeoff_transfers_to_kv():
     assert small < big  # memory: small slices win
     # fragmentation: slices touched (chain length) higher for small Z
     def n_slices(z, n):
-        th = P.kv_memory_slots(z, [n])[0]
         sizes = [1 << zz for zz in z]
         c, i, acc = 0, 0, 0
         while acc < n:

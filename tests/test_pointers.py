@@ -1,6 +1,5 @@
 """Pointer packing: round-trips, bit-budget validation, NULL reservation."""
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -4,8 +4,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import analytical, history, policies, segments
 from repro.core.index import ActiveSegment
+from repro.core import history, policies, segments
 from repro.core.pointers import PoolLayout
 from repro.core.query import make_engine
 from repro.data import synth

@@ -41,6 +41,9 @@ def _build(seed, vocab=500, n_docs=460, docs_per_segment=180, **kw):
         eng.ingest(docs[i: i + 20])
     assert eng.stats.rollovers >= (2 if n_docs >= 2 * docs_per_segment
                                    else 0)
+    # post-condition: allocator + frozen-segment structural invariants
+    # hold on every engine the query-equivalence tests run against.
+    eng.validate_invariants()
     return eng, freqs
 
 

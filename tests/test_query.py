@@ -4,9 +4,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import analytical, query
-from repro.core.query import INVALID
-from repro.data import synth
+from repro.core import query
+
 
 from conftest import PROD_Z, max_slices_for
 

@@ -6,7 +6,6 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import analytical, pointers, slicepool
-from repro.core.index import ActiveSegment
 from repro.core.pointers import NULL, PoolLayout
 from repro.data import synth
 

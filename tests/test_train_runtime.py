@@ -1,17 +1,15 @@
 """Training runtime: optimizer, checkpoint/restart determinism, gradient
 compression convergence, straggler watchdog, stateless data pipeline."""
-import os
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.data import lm_data
 from repro.train import compression, elastic
+from repro.train.optimizer import AdamW
 from repro.train.checkpoint import CheckpointManager
-from repro.train.optimizer import AdamW, global_norm
 
 
 def _quadratic_problem():
