@@ -1,5 +1,5 @@
 """Streaming lifecycle: sustained ingest across segment rollovers with
-slice reclamation, plus unified active+frozen query latency.
+slice reclamation, tiered compaction, and unified query latency.
 
 The paper's Goldilocks tension only materialises under a LIVE stream:
 segments fill, freeze into read-only CSR, and — with the free-list
@@ -12,7 +12,13 @@ drives N rollovers and reports:
     must stay bounded near one segment's demand (asserted), where a
     bump-only allocator would grow linearly with segment count;
   * unified query latency over the active pool + all frozen segments
-    (conjunctions through the fused gap-decode+intersect Pallas kernel).
+    (conjunctions through the fused gap-decode+intersect Pallas kernel);
+  * the frozen-segment count G under geometric compaction
+    (``CompactionPolicy(fanout=2)``) through >= 8 rollovers — asserted
+    equal to popcount(#rollovers), i.e. G = O(log N), where the
+    uncompacted engine's G grows linearly with stream age; queries over
+    the compacted engine are asserted bit-identical to the uncompacted
+    one.
 
 Returned metrics feed ``benchmarks.run --json`` (the CI artifact).
 """
@@ -26,6 +32,7 @@ from benchmarks import common
 from repro.core import analytical
 from repro.core.lifecycle import LifecycleEngine
 from repro.core.pointers import PoolLayout
+from repro.core.segments import CompactionPolicy
 from repro.data import synth
 
 
@@ -87,6 +94,37 @@ def run(fast: bool = True, validate: bool = False):
         ts.append(time.perf_counter() - t0)
         n_hits += len(hits)
 
+    # --- tiered compaction: G = O(log N) over >= 8 rollovers ----------
+    # same stream, half-size segments -> 2x the rollovers; docids are
+    # assigned by global arrival order either way, so query results must
+    # stay bit-identical to the uncompacted engine above.
+    comp_docs_per_seg = docs_per_segment // 2
+    n_rollovers = 2 * n_segments            # >= 8
+    comp = LifecycleEngine(layout, vocab, comp_docs_per_seg,
+                           max_slices=max_slices, max_len=max_len,
+                           validate=validate,
+                           compaction=CompactionPolicy(fanout=2))
+    g_trace = []
+    t0 = time.perf_counter()
+    for docs in streams:
+        for j in range(0, docs_per_segment, batch):
+            comp.ingest(docs[j: j + batch])
+            g = len(comp.segments.frozen)
+            n = comp.stats.rollovers
+            # THE bound: a fanout-2 cascade is a base-2 counter, so
+            # G == popcount(n) <= floor(log2(n)) + 1 at every rollover.
+            assert g == bin(n).count("1"), (n, g)
+            if n:
+                g_trace.append(g)
+                assert g <= int(np.log2(n)) + 1, (n, g)
+    t_comp = time.perf_counter() - t0
+    assert comp.stats.rollovers == n_rollovers, comp.stats
+    assert comp.stats.compactions >= n_rollovers // 2
+    g_final = len(comp.segments.frozen)
+    for terms in queries:
+        assert np.array_equal(comp.conjunctive(terms),
+                              life.conjunctive(terms)), terms
+
     out = {
         "n_docs": n_docs,
         "n_segments": n_segments,
@@ -98,6 +136,12 @@ def run(fast: bool = True, validate: bool = False):
         "live_slots_after_rollover": life.memory_slots_used(),
         "query_unified_ms": float(np.mean(ts) * 1e3),
         "query_hits": n_hits,
+        "compaction_rollovers": n_rollovers,
+        "compactions": comp.stats.compactions,
+        "g_without_compaction": n_rollovers,
+        "g_with_compaction": g_final,
+        "g_max_seen": max(g_trace),
+        "compaction_docs_per_s": (n_docs / t_comp),
     }
     print("\n== bench_lifecycle: streaming rollover + reclamation "
           "(paper §3.1 closed loop) ==")
@@ -108,6 +152,11 @@ def run(fast: bool = True, validate: bool = False):
     print(f"unified active+frozen conjunctive: "
           f"{out['query_unified_ms']:8.2f} ms/query over "
           f"{life.stats.rollovers} frozen segments")
+    print(f"tiered compaction (fanout 2): {n_rollovers} rollovers -> "
+          f"G = {g_final} frozen segments (max {max(g_trace)} seen; "
+          f"uncompacted G would be {n_rollovers}), "
+          f"{comp.stats.compactions} merges, queries bit-identical, "
+          f"{out['compaction_docs_per_s']:.0f} docs/s incl. compaction")
     return out
 
 

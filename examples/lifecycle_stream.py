@@ -14,6 +14,12 @@ one fused scatter-append) — the engine default; pass
 ``bulk_ingest=False`` to replay the same stream through the per-posting
 scan oracle and watch docs/s collapse.
 
+The frozen side is bounded too: the engine runs a geometric
+``CompactionPolicy(fanout=2)``, so same-tier frozen segments
+cascade-merge at every rollover and the frozen-segment count G stays
+O(log N) (= popcount(#rollovers)) instead of growing linearly — queries
+stay bit-identical, only the segment tiling changes.
+
     PYTHONPATH=src python examples/lifecycle_stream.py
 """
 import time
@@ -23,6 +29,7 @@ import numpy as np
 from repro.core import analytical
 from repro.core.lifecycle import LifecycleEngine
 from repro.core.pointers import PoolLayout
+from repro.core.segments import CompactionPolicy
 from repro.data import synth
 
 Z = (1, 4, 7, 11)
@@ -38,7 +45,8 @@ fmax = int(freqs.max())
 life = LifecycleEngine(
     layout, VOCAB, docs_per_segment=SEGMENT_DOCS,
     max_slices=int(analytical.slices_needed(Z, fmax)) + 1,
-    max_len=1 << (fmax - 1).bit_length())
+    max_len=1 << (fmax - 1).bit_length(),
+    compaction=CompactionPolicy(fanout=2))
 
 # --- the stream: batches arrive forever; rollovers happen in-line -----
 # the first batch is ingested before the clock starts so the printed
@@ -50,16 +58,22 @@ for i in range(BATCH, len(stream), BATCH):
     life.ingest(stream[i: i + BATCH])
     if life.stats.rollovers != seen_rollovers:
         seen_rollovers = life.stats.rollovers
+        g_now = len(life.segments.frozen)
+        tiers = [fz.tier for fz in life.segments.frozen]
         print(f"rollover #{seen_rollovers} at doc {life.doc_base}: "
               f"heap high-water {life.stats.high_water_slots} slots, "
               f"live {life.stats.live_slots} "
-              f"(slices recycled to the free lists)")
+              f"(slices recycled); G before compaction "
+              f"{seen_rollovers}, after {g_now} (tiers {tiers})")
 life.check_health()
 wall = time.perf_counter() - t0
 timed_docs = life.stats.docs_ingested - BATCH
 print(f"stream done: {life.stats.docs_ingested} docs "
       f"({timed_docs / wall:.0f} docs/s after warmup, bulk ingest incl. "
-      f"freeze/reclaim pauses), {seen_rollovers} frozen segments + "
+      f"freeze/reclaim/compaction pauses), "
+      f"{len(life.segments.frozen)} frozen segments "
+      f"(from {seen_rollovers} rollovers via "
+      f"{life.stats.compactions} merges) + "
       f"{life.segments.active.next_docid} docs active")
 
 # --- unified queries: one call spans active pool + every frozen CSR ---
@@ -86,7 +100,8 @@ for terms in queries:
 seq_ms = (time.perf_counter() - t0) / len(queries) * 1e3
 life.batched = True
 print(f"batched qexec: {len(queries)} queries over "
-      f"{seen_rollovers} frozen segments in one stacked dispatch — "
+      f"{len(life.segments.frozen)} frozen segments (compacted from "
+      f"{seen_rollovers} rollovers) in one stacked dispatch — "
       f"{batched_ms:.2f} ms/q vs {seq_ms:.2f} ms/q per-query "
       f"({seq_ms / batched_ms:.1f}x), {sum(len(r) for r in results)} hits")
 

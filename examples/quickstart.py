@@ -20,7 +20,9 @@ layout = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 1024, 512))
 spec = synth.CorpusSpec(vocab=5000, n_docs=2000, max_len=14, seed=7)
 docs = synth.zipf_corpus(spec)
 
-# 3. ingest — the entire loop is ONE jitted lax.scan on device
+# 3. ingest — the default batch-parallel bulk allocator: one analytical
+#    allocation + one fused scatter-append for the whole batch (pass
+#    bulk_ingest=False for the per-posting lax.scan oracle)
 seg = ActiveSegment(layout, spec.vocab)
 seg.ingest(jnp.asarray(docs))
 seg.check_health()

@@ -1,0 +1,173 @@
+"""Docs checker: relative links resolve, marked code blocks run.
+
+The user-facing docs (README.md, docs/*.md) make two kinds of promises
+that silently rot: relative links to files that later move, and command
+/ code examples that drift from the real API.  This module checks both:
+
+  * **Links** — every relative markdown link target (``[t](path)``,
+    fragments stripped, http(s)/mailto/anchor-only skipped) must exist
+    on disk, resolved against the document's own directory.
+  * **Runnable blocks** — fenced code blocks whose info string carries
+    the ``docs-ci`` marker (````` ```bash docs-ci ````` or
+    ````` ```python docs-ci `````) are executed from the repo root with
+    ``PYTHONPATH=src``: bash blocks under ``bash -euo pipefail``,
+    python blocks through the current interpreter.  Unmarked blocks are
+    illustrative and never run (e.g. the full tier-1 command, which has
+    its own CI job).
+
+CLI (the CI ``docs`` job; link checking alone is also a tier-1 test,
+``tests/test_docs.py``)::
+
+    PYTHONPATH=src python -m repro.analysis.docs --links-only
+    PYTHONPATH=src python -m repro.analysis.docs --run
+
+Exits 1 listing every broken link / failed block.  Documents default to
+``README.md`` + ``docs/**/*.md`` under the repo root (``--root``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import re
+import subprocess
+import sys
+from typing import List, Optional, Sequence, Tuple
+
+RUN_MARKER = "docs-ci"
+_FENCE = re.compile(r"^\s*```(.*)$")
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+@dataclasses.dataclass
+class CodeBlock:
+    path: str        # document the block came from (repo-relative)
+    line: int        # 1-based line of the opening fence
+    lang: str        # "bash" | "python" | anything else (never run)
+    marked: bool     # carries the docs-ci marker
+    text: str
+
+
+def parse_markdown(path: str) -> Tuple[List[CodeBlock], List[Tuple[int, str]]]:
+    """Split a document into fenced code blocks and (line, target) links.
+
+    Links inside code blocks are NOT collected — fences hold literal
+    code, and e.g. indexing expressions look exactly like md links.
+    """
+    blocks: List[CodeBlock] = []
+    links: List[Tuple[int, str]] = []
+    with open(path, encoding="utf-8") as fh:
+        lines = fh.read().splitlines()
+    open_block: Optional[CodeBlock] = None
+    body: List[str] = []
+    for i, line in enumerate(lines, 1):
+        m = _FENCE.match(line)
+        if m and open_block is None:
+            info = m.group(1).split()
+            open_block = CodeBlock(
+                path=path, line=i, lang=info[0] if info else "",
+                marked=RUN_MARKER in info[1:], text="")
+            body = []
+        elif m and open_block is not None:
+            open_block.text = "\n".join(body) + "\n"
+            blocks.append(open_block)
+            open_block = None
+        elif open_block is not None:
+            body.append(line)
+        else:
+            for lm in _LINK.finditer(line):
+                links.append((i, lm.group(1)))
+    if open_block is not None:
+        raise ValueError(f"{path}:{open_block.line}: unterminated fence")
+    return blocks, links
+
+
+def check_links(doc: str, root: str) -> List[str]:
+    """Broken relative links in one document, as 'doc:line: ...' strings."""
+    errors = []
+    _, links = parse_markdown(os.path.join(root, doc))
+    for line, target in links:
+        if target.startswith(_SKIP_SCHEMES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(
+            os.path.join(root, os.path.dirname(doc), rel))
+        if not os.path.exists(resolved):
+            errors.append(f"{doc}:{line}: broken link '{target}' "
+                          f"(resolved to {os.path.relpath(resolved, root)})")
+    return errors
+
+
+def run_blocks(doc: str, root: str) -> List[str]:
+    """Execute every docs-ci block in one document; return failures."""
+    errors = []
+    blocks, _ = parse_markdown(os.path.join(root, doc))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    for b in blocks:
+        if not b.marked:
+            continue
+        where = f"{doc}:{b.line}"
+        if b.lang == "bash":
+            cmd = ["bash", "-euo", "pipefail", "-c", b.text]
+        elif b.lang == "python":
+            cmd = [sys.executable, "-c", b.text]
+        else:
+            errors.append(f"{where}: {RUN_MARKER} on unrunnable language "
+                          f"'{b.lang}' (bash or python only)")
+            continue
+        print(f"-- running {where} ({b.lang})", flush=True)
+        proc = subprocess.run(cmd, cwd=root, env=env,
+                              capture_output=True, text=True)
+        if proc.returncode != 0:
+            errors.append(f"{where}: block exited {proc.returncode}\n"
+                          f"{proc.stdout}{proc.stderr}")
+    return errors
+
+
+def default_docs(root: str) -> List[str]:
+    docs = []
+    if os.path.exists(os.path.join(root, "README.md")):
+        docs.append("README.md")
+    docs_dir = os.path.join(root, "docs")
+    if os.path.isdir(docs_dir):
+        for dirpath, _, names in sorted(os.walk(docs_dir)):
+            for n in sorted(names):
+                if n.endswith(".md"):
+                    docs.append(os.path.relpath(
+                        os.path.join(dirpath, n), root))
+    return docs
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("docs", nargs="*",
+                    help="documents to check (default: README.md docs/**.md)")
+    ap.add_argument("--root", default=".", help="repo root")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--links-only", action="store_true",
+                      help="only check that relative links resolve")
+    mode.add_argument("--run", action="store_true",
+                      help="only execute the docs-ci code blocks")
+    args = ap.parse_args(argv)
+
+    root = os.path.abspath(args.root)
+    docs = args.docs or default_docs(root)
+    errors: List[str] = []
+    for doc in docs:
+        if not args.run:
+            errors += check_links(doc, root)
+        if not args.links_only:
+            errors += run_blocks(doc, root)
+    for e in errors:
+        print(f"DOCS: {e}", file=sys.stderr)
+    print(f"{len(docs)} documents checked, {len(errors)} problems")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

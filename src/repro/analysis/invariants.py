@@ -47,9 +47,15 @@ Invariants enforced (the Goldilocks allocator's bookkeeping, paper
     segment-relative docids; per-term ``docid_bounds`` agrees with the
     data; ``freed_slices`` unique and within pool capacity.
 ``check_segment_set``
-    Frozen segments own disjoint ascending docid ranges; the active
-    base continues exactly where the newest frozen segment ends; the
-    set is bounded by ``max_segments``.
+    Frozen segments own disjoint ascending docid ranges tiling
+    contiguously oldest-first (compacted segments cover their members'
+    union, so the tiling survives any rollover/compaction mix); the
+    active base continues exactly where the newest frozen segment ends;
+    the set is bounded by ``max_segments``.  With ``fanout=`` (the
+    engine's :class:`~repro.core.segments.CompactionPolicy` fanout) it
+    also enforces the tier structure: non-increasing oldest-first, no
+    run of ``fanout`` adjacent same-tier segments (the geometric
+    fixpoint behind G = O(log N)).
 ``check_stacked_lists``
     Byte widths in {1, 2, 4}; ``woffs`` keep every SLAB_WORDS-word DMA
     in bounds; pad blocks (firsts == INVALID) decode to INVALID; valid
@@ -349,19 +355,31 @@ def check_frozen_segment(seg, *, layout: Optional[PoolLayout] = None,
 # ---------------------------------------------------------------------------
 # check_segment_set
 # ---------------------------------------------------------------------------
-def check_segment_set(segset, *,
-                      layout: Optional[PoolLayout] = None) -> Report:
+def check_segment_set(segset, *, layout: Optional[PoolLayout] = None,
+                      fanout: Optional[int] = None) -> Report:
     """Validate a ``SegmentSet``/``ShardedSegmentSet``-shaped object
-    (``frozen`` list + ``_doc_base`` + ``max_segments``): disjoint
-    ascending frozen docid ranges, active base continuing the newest
-    frozen segment, bounded set size.  Each member segment is validated
-    too (sharded members shard-by-shard)."""
+    (``frozen`` list + ``_doc_base`` + ``max_segments``): frozen docid
+    ranges tile contiguously oldest-first (compacted segments cover the
+    union of their members, so the tiling survives any mix of rollovers
+    and compactions), the active base continues the newest frozen
+    segment, the set stays bounded.  Each member segment is validated
+    too (sharded members shard-by-shard).
+
+    ``fanout`` (pass the engine's ``CompactionPolicy.fanout``) adds the
+    tier-structure check: tiers are non-increasing oldest-first (the
+    geometric cascade merges oldest-first, like carries in a
+    base-``fanout`` counter) and no run of ``fanout`` adjacent
+    same-tier segments survives — the policy fixpoint that makes
+    G = O(log N).  Without ``fanout`` only tier sanity (``tier >= 0``)
+    is checked, so hand-driven ``compact(k, start=...)`` windows that
+    break the cascade shape are still accepted."""
     rep = Report(check="segment-set")
     frozen = list(segset.frozen)
     if len(frozen) > int(segset.max_segments) - 1:
         rep.add("frozen", f"{len(frozen)} frozen segments exceed "
                 f"max_segments - 1 = {int(segset.max_segments) - 1}")
     prev_end = None
+    tiers: List[int] = []
     for i, fz in enumerate(frozen):
         base, n = int(fz.doc_base), int(fz.n_docs)
         if n < 0:
@@ -369,7 +387,16 @@ def check_segment_set(segset, *,
         if prev_end is not None and base < prev_end:
             rep.add("frozen", f"segment {i}: doc_base {base} overlaps "
                     f"previous segment's range ending at {prev_end}")
+        elif prev_end is not None and base > prev_end:
+            rep.add("frozen", f"segment {i}: doc_base {base} leaves a "
+                    f"gap after previous range end {prev_end} — frozen "
+                    "ranges must tile contiguously (rollover appends "
+                    "contiguously; compaction merges whole windows)")
         prev_end = base + n
+        tier = int(getattr(fz, "tier", 0))
+        tiers.append(tier)
+        if tier < 0:
+            rep.add("tier", f"segment {i}: negative tier {tier}")
         shards = getattr(fz, "shards", None)
         if shards is None:
             _merge(rep, check_frozen_segment(fz, layout=layout),
@@ -382,7 +409,28 @@ def check_segment_set(segset, *,
     if frozen and int(segset._doc_base) != prev_end:
         rep.add("_doc_base", f"active doc_base {int(segset._doc_base)} "
                 f"!= newest frozen end {prev_end} — ranges must tile")
+    if fanout is not None and tiers:
+        if int(fanout) < 2:
+            rep.add("tier", f"fanout {fanout} < 2 is not a geometric "
+                    "policy")
+        for i in range(1, len(tiers)):
+            if tiers[i] > tiers[i - 1]:
+                rep.add("tier", f"segment {i}: tier {tiers[i]} exceeds "
+                        f"older segment's tier {tiers[i - 1]} — the "
+                        "geometric cascade keeps tiers non-increasing "
+                        "oldest-first")
+        run, run_tier = 0, None
+        for i, t in enumerate(tiers):
+            run = run + 1 if t == run_tier else 1
+            run_tier = t
+            if run >= int(fanout):
+                rep.add("tier", f"segments {i - run + 1}..{i}: {run} "
+                        f"adjacent tier-{t} segments >= fanout "
+                        f"{int(fanout)} — the policy fixpoint was not "
+                        "reached (G would grow linearly)")
+                break
     rep.stats["segments"] = len(frozen)
+    rep.stats["max_tier"] = max(tiers) if tiers else 0
     return rep
 
 

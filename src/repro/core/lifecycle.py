@@ -29,6 +29,13 @@ frozen segments, with early-exit top-k (``topk_conjunctive`` /
 ``conjunctive(..., limit=k)``).  The per-query host loop below
 (``batched=False``) is kept as the bit-exactness oracle
 (tests/test_qexec.py).
+
+The frozen side is bounded too: construct either engine with
+``compaction=CompactionPolicy(fanout=r)`` (or call ``compact(k)``
+directly) and same-tier frozen segments cascade-merge after every
+rollover, keeping the frozen-segment count G = O(log N) — query
+results are bit-identical, only the segment tiling changes
+(tests/test_compaction.py, docs/lifecycle.md).
 """
 from __future__ import annotations
 
@@ -188,6 +195,7 @@ _TOPK_LIMIT_MAX = 4096
 class LifecycleStats:
     docs_ingested: int = 0
     rollovers: int = 0
+    compactions: int = 0
     high_water_slots: int = 0
     live_slots: int = 0
 
@@ -244,27 +252,46 @@ class _LifecycleBase:
         the allocator state and every frozen segment; raise
         :class:`~repro.analysis.invariants.InvariantViolation` on the
         first broken invariant.  Called automatically at every rollover
-        when the engine was built with ``validate=True`` (debug flag —
-        each call is an O(live postings) host walk, keep it off the
-        production ingest path)."""
+        (and engine-driven compaction) when the engine was built with
+        ``validate=True`` (debug flag — each call is an O(live postings)
+        host walk, keep it off the production ingest path)."""
         from repro.analysis import invariants
         invariants.check_pool_state(
             self.layout, self.segments.active.state).raise_if_failed()
+        policy = getattr(self.segments, "compaction", None)
         invariants.check_segment_set(
-            self.segments, layout=self.layout).raise_if_failed()
+            self.segments, layout=self.layout,
+            fanout=policy.fanout if policy is not None else None
+        ).raise_if_failed()
+
+    def compact(self, k: int):
+        """Merge the ``k`` oldest frozen segments
+        (:meth:`~repro.core.segments.SegmentSet.compact`) and resync the
+        query-side packed views — the qexec ``FrozenStack`` cache is
+        invalidated exactly like a rollover.  Returns the merged frozen
+        segment, or None when fewer than two segments exist (no-op)."""
+        merged = self.segments.compact(k)
+        self._sync_frozen()
+        if merged is not None and self.validate:
+            self.validate_invariants()
+        return merged
 
     def _sync_frozen(self) -> None:
+        """Mirror ``segments.frozen`` into packed query-side views.
+        Any change to the list — a rollover appending, a compaction
+        replacing members, retirement popping — drops the cached
+        ``FrozenStack`` so the next batch rebuilds it.  Called after
+        every ingest AND at the top of every query entry point, so
+        compactions driven directly on the SegmentSet are picked up
+        before the stale stack could serve a query."""
         by_id = {id(p.seg): p for p in self._packed}
-        fresh = []
-        for fz in self.segments.frozen:
-            p = by_id.get(id(fz))
-            if p is None:
-                p = PackedSegment(fz)
-                self.stats.rollovers += 1
-            fresh.append(p)
+        fresh = [by_id.get(id(fz)) or PackedSegment(fz)
+                 for fz in self.segments.frozen]
         if [id(p) for p in fresh] != [id(p) for p in self._packed]:
             self._qstack = None  # segment set changed: rebuild the stack
         self._packed = fresh
+        self.stats.rollovers = self.segments.n_rollovers
+        self.stats.compactions = self.segments.n_compactions
 
     def _frozen_stack(self) -> Optional[qexec.FrozenStack]:
         if self._qstack is None and self._packed:
@@ -308,6 +335,7 @@ class _LifecycleBase:
         Q = len(queries)
         if Q == 0:
             return []
+        self._sync_frozen()   # pick up out-of-band compactions/rollovers
         if (kind == "conjunctive" and limit is not None
                 and limit <= _TOPK_LIMIT_MAX):
             # a conjunctive limit IS a top-k: take the early-exit path.
@@ -357,6 +385,7 @@ class _LifecycleBase:
         Q = len(queries)
         if Q == 0:
             return []
+        self._sync_frozen()   # pick up out-of-band compactions/rollovers
         k = int(k)
         if k <= 0:
             return [np.zeros(0, np.int64) for _ in range(Q)]
@@ -417,6 +446,7 @@ class _LifecycleBase:
     # -- queries: per-query host-loop oracle (batched=False) -------------
     def _unified(self, kind: str, terms: Sequence[int],
                  limit: Optional[int]) -> np.ndarray:
+        self._sync_frozen()   # pick up out-of-band compactions/rollovers
         parts = [self._active_desc(kind, terms)]
         total = len(parts[0])
         for pseg in reversed(self._packed):   # newest frozen first
@@ -475,7 +505,8 @@ class LifecycleEngine(_LifecycleBase):
                  bulk_ingest: bool = True,
                  batched: bool = True,
                  batched_kernel: Optional[bool] = None,
-                 validate: bool = False):
+                 validate: bool = False,
+                 compaction: Optional[seg_mod.CompactionPolicy] = None):
         self.layout = layout
         self.vocab_size = vocab_size
         self.max_slices = max_slices
@@ -487,7 +518,7 @@ class LifecycleEngine(_LifecycleBase):
         self.validate = validate
         self.segments = seg_mod.SegmentSet(
             layout, vocab_size, docs_per_segment, max_segments=max_segments,
-            bulk_ingest=bulk_ingest)
+            bulk_ingest=bulk_ingest, compaction=compaction)
         self.engine = q.make_engine(layout, max_slices, max_len,
                                     max_query_len, use_kernel=use_kernel,
                                     interpret=interpret)
@@ -545,7 +576,8 @@ class ShardedLifecycleEngine(_LifecycleBase):
                  bulk_ingest: bool = True,
                  batched: bool = True,
                  batched_kernel: Optional[bool] = None,
-                 validate: bool = False):
+                 validate: bool = False,
+                 compaction: Optional[seg_mod.CompactionPolicy] = None):
         self.layout = layout
         self.vocab_size = vocab_size
         self.max_slices = max_slices
@@ -557,7 +589,8 @@ class ShardedLifecycleEngine(_LifecycleBase):
         self.validate = validate
         self.segments = shx.ShardedSegmentSet(
             layout, vocab_size, docs_per_segment, mesh, rules=rules,
-            max_segments=max_segments, bulk_ingest=bulk_ingest)
+            max_segments=max_segments, bulk_ingest=bulk_ingest,
+            compaction=compaction)
         self.engine = shx.make_sharded_engine(
             layout, mesh, max_slices, max_len, max_query_len,
             rules=self.segments.rules, use_kernel=use_kernel,

@@ -14,7 +14,11 @@ query-side counterpart of bulk ingest, in three layers:
      engine sees O(log^2) distinct jit keys).  A query evaluates over
      EVERY frozen segment inside a single jitted vmap — zero host syncs
      in the frozen path.  Per-(term, segment) summaries (valid count,
-     first/last docid) ride along for whole-segment skips.
+     first/last docid) ride along for whole-segment skips.  G itself is
+     bounded by tiered compaction
+     (:class:`~repro.core.segments.CompactionPolicy`): without it the
+     stack's gather cost and pow2(G) bucket crossings grow linearly
+     with stream age; with it G = O(log N).
   2. **Query batching.**  A ``[Q, max_query_len]`` term matrix is
      evaluated in one dispatch over the active pool (vmap over queries
      on the existing ``*_asc`` engines; the sharded engine already
@@ -73,8 +77,14 @@ class FrozenStack:
     (duck-typed: ``.packed(t)`` / ``.postings_asc(t)`` / ``.bounds(t)``
     / ``.doc_base``) and caches, per term, the ``[G, ...]`` stacked
     leaves plus the (count, last-docid) summaries — built once per
-    (stack, term), reused by every query batch until the next rollover
-    invalidates the whole stack."""
+    (stack, term), reused by every query batch until the next CHANGE to
+    the frozen-segment list invalidates the whole stack.  Rollover
+    (appends a segment) and compaction (replaces a window with its
+    merge) both count: the lifecycle engines' ``_sync_frozen`` drops the
+    stack whenever the list's membership differs, so a compacted set
+    rebuilds at its new, smaller G — that shrinking G is exactly how
+    compaction bounds the gather cost and the pow2(G) jit-recompile
+    cadence under an infinite stream."""
 
     def __init__(self, psegs: Sequence):
         self.psegs = list(psegs)

@@ -14,11 +14,38 @@ postings".  Here:
     the paper's "variant of PForDelta".
   * :class:`SegmentSet` searches newest-active + frozen segments and merges
     results in reverse-chronological order, using per-segment docid bases.
+  * :meth:`SegmentSet.compact` + :class:`CompactionPolicy` bound the
+    frozen side: rollover alone appends a frozen segment forever, so the
+    segment count G — and with it the qexec stack gather, the merge
+    width, and the jit-recompile cadence — grows linearly with stream
+    age.  Compaction merges adjacent frozen segments into one larger
+    immutable segment (LSM/Earlybird-style tiering; Asadi & Lin, Moffat
+    & Mackenzie in PAPERS.md), keeping G = O(log N) under an infinite
+    stream.
+
+Usage (compaction)::
+
+    from repro.core.segments import CompactionPolicy, SegmentSet
+
+    # geometric tiering, driven automatically at every rollover:
+    ss = SegmentSet(layout, vocab, docs_per_segment,
+                    compaction=CompactionPolicy(fanout=2))
+    ss.ingest(docs)            # rollovers now cascade same-tier merges
+    [fz.tier for fz in ss.frozen]   # non-increasing, no run >= fanout
+
+    # or merge the k oldest frozen segments by hand (a no-op when the
+    # window holds fewer than two segments; returns the merged segment):
+    merged = ss.compact(k=4)
+
+Compaction is a pure frozen-side rewrite: the frozen slices were
+already recycled at rollover, so nothing is handed back to the
+allocator; per-term postings are re-merged in global-docid order and
+every query sees bit-identical results (tests/test_compaction.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -57,6 +84,10 @@ class FrozenSegment:
     # per-pool arrays of slice indices the freeze walked — everything the
     # active segment had allocated, ready for slicepool.release_slices.
     freed_slices: Optional[List[np.ndarray]] = None
+    # compaction tier: 0 straight from rollover; merging segments yields
+    # max(tier) + 1.  The geometric CompactionPolicy keeps, per tier,
+    # fewer than `fanout` segments, so G = O(log N) under a live stream.
+    tier: int = 0
 
     def postings(self, term: int) -> np.ndarray:
         return self.data[self.offsets[term]: self.offsets[term + 1]]
@@ -129,6 +160,110 @@ def freeze(seg: ActiveSegment, doc_base: int = 0) -> FrozenSegment:
                         np.asarray(seg.state.tail),
                         np.asarray(seg.state.freq),
                         n_docs=seg.next_docid, doc_base=doc_base)
+
+
+# ---------------------------------------------------------------------------
+# Tiered compaction: merge adjacent frozen segments (LSM/Earlybird style)
+# ---------------------------------------------------------------------------
+def _adjacent_window(window) -> Tuple[int, int, List[int]]:
+    """Validate that ``window`` (oldest -> newest) tiles a contiguous
+    docid range and return ``(doc_base, n_docs, per-segment docid
+    offsets)``.  Raises when ranges do not tile (merging would corrupt
+    the disjoint-ascending-range invariant every query merge relies on)
+    or when the merged docid span overflows the 24-bit docid field."""
+    base = int(window[0].doc_base)
+    end = base
+    offs: List[int] = []
+    for fz in window:
+        if int(fz.doc_base) != end:
+            raise ValueError(
+                f"segments are not doc-range adjacent: doc_base "
+                f"{int(fz.doc_base)} != previous range end {end}; "
+                f"compaction windows must be contiguous oldest-first")
+        offs.append(end - base)
+        end += int(fz.n_docs)
+    n_docs = end - base
+    if n_docs - 1 > post.MAX_DOC:
+        raise OverflowError(
+            f"merged segment would span {n_docs} docs > the 24-bit "
+            f"docid field ({post.MAX_DOC + 1}); compact fewer segments")
+    return base, n_docs, offs
+
+
+def _merge_csr(segs: Sequence["FrozenSegment"], docid_offsets: Sequence[int],
+               *, n_docs: int, doc_base: int, tier: int) -> FrozenSegment:
+    """Merge CSR postings stores: per-term streams are concatenated in
+    segment (= ascending docid) order with each posting's docid rebased
+    by its segment's offset inside the merged range.  Positions are
+    preserved, so phrase queries see identical postings.  Vectorised
+    numpy throughout — O(total postings), off the query path like the
+    freeze walk.  ``freed_slices`` is None: compaction is a pure
+    frozen-side rewrite (slices were recycled at rollover already)."""
+    V = len(segs[0].offsets) - 1
+    counts = np.zeros(V, np.int64)
+    for s in segs:
+        if len(s.offsets) - 1 != V:
+            raise ValueError(
+                f"vocab mismatch: {len(s.offsets) - 1} != {V}")
+        counts += np.diff(s.offsets)
+    offsets = np.zeros(V + 1, np.int64)
+    offsets[1:] = np.cumsum(counts)
+    data = np.zeros(int(offsets[-1]), np.uint32)
+    placed = np.zeros(V, np.int64)   # postings already placed, per term
+    for s, off in zip(segs, docid_offsets):
+        cnt = np.diff(s.offsets)
+        if s.data.size:
+            dest0 = offsets[:-1] + placed
+            # each posting lands at its term's destination cursor plus
+            # its rank within the source term chunk
+            idx = (np.repeat(dest0, cnt) + np.arange(s.data.size)
+                   - np.repeat(s.offsets[:-1], cnt))
+            data[idx] = s.data + np.uint32(int(off) << post.POS_BITS)
+        placed += cnt
+    return FrozenSegment(offsets=offsets, data=data, n_docs=n_docs,
+                         doc_base=doc_base, freed_slices=None, tier=tier)
+
+
+def merge_frozen(segs: Sequence[FrozenSegment]) -> FrozenSegment:
+    """Merge doc-range-adjacent frozen segments (oldest -> newest) into
+    ONE immutable segment covering their union: per-term postings in
+    global-docid order, tier = max(member tiers) + 1.  Queries over the
+    merged segment are bit-identical to queries over the originals."""
+    base, n_docs, offs = _adjacent_window(segs)
+    tier = max(int(getattr(s, "tier", 0)) for s in segs) + 1
+    return _merge_csr(segs, offs, n_docs=n_docs, doc_base=base, tier=tier)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """Geometric tiering: compact whenever ``fanout`` same-tier segments
+    accumulate (merging them into one tier+1 segment), cascading like a
+    base-``fanout`` counter — after N rollovers at most
+    ``fanout - 1`` segments survive per tier, so G = O(log_fanout N)
+    under an infinite stream."""
+    fanout: int = 2
+
+    def __post_init__(self):
+        if self.fanout < 2:
+            raise ValueError(f"fanout must be >= 2, got {self.fanout}")
+
+    def plan(self, tiers: Sequence[int]) -> Optional[Tuple[int, int]]:
+        """First (oldest) run of >= fanout adjacent equal-tier segments,
+        as ``(start, k=fanout)`` — the window to compact next — or None
+        at the fixpoint.  Merging the oldest ``fanout`` members of a run
+        keeps tiers non-increasing oldest-first (the element before the
+        run is strictly higher-tier), which ``check_segment_set``
+        enforces."""
+        tiers = list(tiers)
+        i = 0
+        while i < len(tiers):
+            j = i
+            while j < len(tiers) and tiers[j] == tiers[i]:
+                j += 1
+            if j - i >= self.fanout:
+                return i, self.fanout
+            i = j
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -229,13 +364,17 @@ class SegmentSet:
 
     def __init__(self, layout: PoolLayout, vocab_size: int,
                  docs_per_segment: int, max_segments: int = 12,
-                 bulk_ingest: bool = True):
+                 bulk_ingest: bool = True,
+                 compaction: Optional[CompactionPolicy] = None):
         self.layout = layout
         self.vocab_size = vocab_size
         self.docs_per_segment = docs_per_segment
         self.max_segments = max_segments
         self.bulk_ingest = bulk_ingest
+        self.compaction = compaction
         self.frozen: List[FrozenSegment] = []
+        self.n_rollovers = 0
+        self.n_compactions = 0
         self.active = self._new_active()
         self._doc_base = 0
 
@@ -253,16 +392,49 @@ class SegmentSet:
         """Freeze the active segment and RECYCLE its slices: the frozen
         postings live on as read-only CSR, while every slice the segment
         occupied goes back on the pool free lists for the next active
-        segment (the Goldilocks loop — watermark bounded under churn)."""
+        segment (the Goldilocks loop — watermark bounded under churn).
+        With a :class:`CompactionPolicy` attached, same-tier frozen
+        segments then cascade-merge so G stays O(log N)."""
         fz = freeze(self.active, doc_base=self._doc_base)
         self.frozen.append(fz)
+        self.n_rollovers += 1
         if len(self.frozen) > self.max_segments - 1:
             self.frozen.pop(0)  # oldest segment retired (paper: bounded set)
         self._doc_base += self.active.next_docid
         released = slicepool.release_slices(
             self.layout, self.active.state, fz.freed_slices)
         self.active = self._new_active(state=released)
+        self._apply_compaction()
         return fz
+
+    def compact(self, k: int, *, start: int = 0
+                ) -> Optional[FrozenSegment]:
+        """Merge the ``k`` oldest frozen segments (or ``k`` adjacent
+        ones from index ``start`` — the policy's window) into one larger
+        immutable segment: per-term postings re-merged in global-docid
+        order, per-term summaries rebuilt, the disjoint-ascending-range
+        tiling preserved.  ``k`` is clamped to the available window; a
+        window holding fewer than two segments is a no-op returning
+        None.  Recycles nothing — the frozen slices were already freed
+        at rollover; this is a pure frozen-side rewrite."""
+        k = min(int(k), len(self.frozen) - start)
+        if k < 2:
+            return None
+        merged = merge_frozen(self.frozen[start: start + k])
+        self.frozen[start: start + k] = [merged]
+        self.n_compactions += 1
+        return merged
+
+    def _apply_compaction(self) -> None:
+        """Run the tiering policy to its fixpoint (no run of >= fanout
+        same-tier segments left)."""
+        if self.compaction is None:
+            return
+        while True:
+            plan = self.compaction.plan([fz.tier for fz in self.frozen])
+            if plan is None:
+                return
+            self.compact(plan[1], start=plan[0])
 
     def history_freqs(self) -> np.ndarray:
         """H(t) from the most recent frozen segment (paper §7)."""

@@ -15,8 +15,10 @@ architecture on one JAX mesh:
     stacked on a leading ``[S, ...]`` axis and sharded over the logical
     ``"docs"`` axis (``repro.dist.sharding``; data axes of the mesh).
   * **Ingest.**  A ``shard_map`` over the docid-partitioned stream: each
-    device flattens its own ``[B/S, L]`` doc block and runs the scan
-    allocator on its private pools.  No cross-shard traffic at all.
+    device flattens its own ``[B/S, L]`` doc block and runs the
+    batch-parallel bulk allocator on its private pools
+    (``bulk_ingest=False`` for the per-posting scan oracle).  No
+    cross-shard traffic at all.
   * **Query.**  Batched (vmap over queries) evaluation inside one
     ``shard_map``: conjunctions run the Pallas ``postings_intersect``
     kernel per shard, shard-local descending lists are translated to
@@ -28,6 +30,13 @@ architecture on one JAX mesh:
   * **Rollover.**  When the active sharded segment fills, every shard is
     frozen to its own compressed read-only CSR segment (global docids,
     PForDelta-lite blocks) — :class:`ShardedFrozenSegment`.
+  * **Compaction.**  :meth:`ShardedSegmentSet.compact` merges adjacent
+    frozen segments shard-by-shard (shard ``s`` of the merged segment
+    is the CSR merge of each member's shard ``s``); residue-class
+    partitioning survives because ``docs_per_segment`` is a multiple of
+    ``S``.  With a :class:`~repro.core.segments.CompactionPolicy` the
+    cascade runs at every rollover, exactly as in the single-device
+    :class:`~repro.core.segments.SegmentSet` — G = O(log N).
 """
 from __future__ import annotations
 
@@ -351,6 +360,9 @@ class ShardedFrozenSegment:
     shards: List[seg_mod.FrozenSegment]
     n_docs: int
     doc_base: int = 0
+    # compaction tier, exactly as on FrozenSegment: 0 from rollover,
+    # max(member tiers) + 1 after a merge (see ShardedSegmentSet.compact)
+    tier: int = 0
 
     def docids_desc(self, term: int) -> np.ndarray:
         parts = [fz.docids_desc(term) for fz in self.shards]
@@ -394,7 +406,8 @@ class ShardedSegmentSet:
     def __init__(self, layout: PoolLayout, vocab_size: int,
                  docs_per_segment: int, mesh: Mesh,
                  rules: Optional[shd.Rules] = None, max_segments: int = 12,
-                 bulk_ingest: bool = True):
+                 bulk_ingest: bool = True,
+                 compaction: Optional[seg_mod.CompactionPolicy] = None):
         self.layout = layout
         self.vocab_size = vocab_size
         self.mesh = mesh
@@ -402,7 +415,10 @@ class ShardedSegmentSet:
         self.docs_per_segment = docs_per_segment
         self.max_segments = max_segments
         self.bulk_ingest = bulk_ingest
+        self.compaction = compaction
         self.frozen: List[ShardedFrozenSegment] = []
+        self.n_rollovers = 0
+        self.n_compactions = 0
         self._doc_base = 0
         self.active = self._new_active()
         if docs_per_segment % self.active.num_shards:
@@ -446,13 +462,54 @@ class ShardedSegmentSet:
         fz = ShardedFrozenSegment(shards, n_docs=seg.next_docid,
                                   doc_base=self._doc_base)
         self.frozen.append(fz)
+        self.n_rollovers += 1
         if len(self.frozen) > self.max_segments - 1:
             self.frozen.pop(0)  # oldest segment retired (bounded set)
         self._doc_base += seg.next_docid
         released = slicepool.release_slices(
             self.layout, seg.state, [sh.freed_slices for sh in shards])
         self.active = self._new_active(state=released)
+        self._apply_compaction()
         return fz
+
+    def compact(self, k: int, *, start: int = 0
+                ) -> Optional[ShardedFrozenSegment]:
+        """Merge the ``k`` oldest frozen segments (or ``k`` adjacent
+        ones from ``start``) shard-by-shard: shard ``s`` of the merged
+        segment is the CSR merge of every window member's shard ``s``.
+        Members store global-within-segment docids (``g = local * S +
+        shard``), so rebasing by each member's offset inside the merged
+        range keeps residue classes intact and the per-shard streams in
+        ascending docid order — exactly the single-device merge, S
+        times.  Clamped/no-op semantics match
+        :meth:`~repro.core.segments.SegmentSet.compact`."""
+        k = min(int(k), len(self.frozen) - start)
+        if k < 2:
+            return None
+        window = self.frozen[start: start + k]
+        base, n_docs, offs = seg_mod._adjacent_window(window)
+        tier = max(int(fz.tier) for fz in window) + 1
+        S = len(window[0].shards)
+        shards = [
+            seg_mod._merge_csr([fz.shards[s] for fz in window], offs,
+                               n_docs=n_docs // S, doc_base=base,
+                               tier=tier)
+            for s in range(S)
+        ]
+        merged = ShardedFrozenSegment(shards, n_docs=n_docs,
+                                      doc_base=base, tier=tier)
+        self.frozen[start: start + k] = [merged]
+        self.n_compactions += 1
+        return merged
+
+    def _apply_compaction(self) -> None:
+        if self.compaction is None:
+            return
+        while True:
+            plan = self.compaction.plan([fz.tier for fz in self.frozen])
+            if plan is None:
+                return
+            self.compact(plan[1], start=plan[0])
 
     def history_freqs(self) -> np.ndarray:
         """H(t) from the most recent frozen segment (paper §7)."""

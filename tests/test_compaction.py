@@ -1,0 +1,453 @@
+"""Tiered frozen-segment compaction (ROADMAP item 1, ISSUE 7).
+
+The bit-equality oracle: a lifecycle engine that compacts (geometric
+tiering at every rollover, or manual ``compact(k)`` calls) must return
+BIT-IDENTICAL results to a never-compacted engine fed the same stream —
+conjunctive / disjunctive / phrase / top-k, batched and sequential,
+through >= 3 rollovers, single-device and 4-shard.  Around the oracle:
+``CompactionPolicy.plan`` units, ``merge_frozen`` structural properties,
+edge cases (k > #frozen, tier-2 re-compaction, compact-then-rollover,
+empty terms, single-segment no-op, non-adjacent windows), the
+G = O(log N) growth bound, and ``check_segment_set`` accepting every
+policy-produced tiling while rejecting tier-structure violations."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis import invariants
+from repro.core import analytical
+from repro.core import segments as seg_mod
+from repro.core.lifecycle import LifecycleEngine
+from repro.core.pointers import PoolLayout
+from repro.core.segments import CompactionPolicy, SegmentSet, merge_frozen
+from repro.data import synth
+
+Z = (1, 4, 7, 11)
+LAYOUT = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 512, 64))
+VOCAB = 300
+
+
+def _stream(seed, n_docs):
+    spec = synth.CorpusSpec(vocab=VOCAB, n_docs=n_docs, seed=seed)
+    docs = synth.zipf_corpus(spec)
+    return docs, synth.term_freqs(docs, VOCAB)
+
+
+def _engine(freqs, docs_per_segment=80, **kw):
+    fmax = max(int(freqs.max()), 1)
+    return LifecycleEngine(
+        LAYOUT, VOCAB, docs_per_segment,
+        max_slices=int(analytical.slices_needed(Z, fmax)) + 1,
+        max_len=1 << (fmax - 1).bit_length(),
+        use_kernel=False, **kw)
+
+
+def _feed(engines, docs, batch=20):
+    for i in range(0, len(docs), batch):
+        for e in engines:
+            e.ingest(docs[i: i + batch])
+
+
+def _segset(docs_per_segment=60, n_docs=240, seed=2, **kw):
+    docs, freqs = _stream(seed, n_docs)
+    ss = SegmentSet(LAYOUT, VOCAB, docs_per_segment, **kw)
+    for i in range(0, n_docs, 20):
+        ss.ingest(docs[i: i + 20])
+    return ss, freqs
+
+
+# ---------------------------------------------------------------------------
+# CompactionPolicy.plan units
+# ---------------------------------------------------------------------------
+class TestPolicy:
+    def test_fanout_below_two_rejected(self):
+        with pytest.raises(ValueError):
+            CompactionPolicy(fanout=1)
+
+    @pytest.mark.parametrize("tiers,expect", [
+        ([], None),
+        ([0], None),
+        ([1, 0], None),                 # counter fixpoint
+        ([0, 0], (0, 2)),               # oldest same-tier pair
+        ([1, 0, 0], (1, 2)),            # run starts past a higher tier
+        ([2, 1, 1, 0], (1, 2)),         # first (oldest) run wins
+        ([0, 0, 0], (0, 2)),            # only fanout members per merge
+    ])
+    def test_plan_fanout2(self, tiers, expect):
+        assert CompactionPolicy(fanout=2).plan(tiers) == expect
+
+    @pytest.mark.parametrize("tiers,expect", [
+        ([0, 0], None),                 # below fanout: wait
+        ([0, 0, 0], (0, 3)),
+        ([1, 1, 0, 0, 0], (2, 3)),
+        ([2, 1, 1, 1, 0], (1, 3)),
+    ])
+    def test_plan_fanout3(self, tiers, expect):
+        assert CompactionPolicy(fanout=3).plan(tiers) == expect
+
+    def test_cascade_reaches_counter_shape(self):
+        """Driving plan() to its fixpoint after each increment behaves
+        like a base-2 counter: G after N rollovers == popcount(N)."""
+        pol = CompactionPolicy(fanout=2)
+        tiers = []
+        for n in range(1, 33):
+            tiers.append(0)
+            while (p := pol.plan(tiers)) is not None:
+                i, k = p
+                tiers[i: i + k] = [max(tiers[i: i + k]) + 1]
+            assert len(tiers) == bin(n).count("1"), (n, tiers)
+            assert tiers == sorted(tiers, reverse=True), tiers
+
+
+# ---------------------------------------------------------------------------
+# merge_frozen structural properties
+# ---------------------------------------------------------------------------
+class TestMergeFrozen:
+    def test_merged_postings_equal_rebased_concat(self):
+        ss, _ = _segset()
+        assert len(ss.frozen) >= 3
+        window = ss.frozen[:3]
+        merged = merge_frozen(window)
+        assert merged.tier == 1
+        assert merged.doc_base == window[0].doc_base
+        assert merged.n_docs == sum(int(f.n_docs) for f in window)
+        for t in range(VOCAB):
+            parts = []
+            for fz in window:
+                off = int(fz.doc_base) - int(window[0].doc_base)
+                parts.append(fz.postings(t).astype(np.uint64)
+                             + (np.uint64(off) << np.uint64(8)))
+            exp = np.concatenate(parts)
+            got = merged.postings(t).astype(np.uint64)
+            assert np.array_equal(got, exp), t
+            # per-term summaries rebuilt consistently
+            cnt, first, last = merged.docid_bounds(t)
+            assert cnt == exp.size
+            if cnt:
+                assert first == int(exp[0] >> np.uint64(8))
+                assert last == int(exp[-1] >> np.uint64(8))
+        # and the merged segment passes the structural validator alone
+        invariants.check_frozen_segment(
+            merged, layout=LAYOUT).raise_if_failed()
+
+    def test_empty_term_stays_empty(self):
+        ss, freqs = _segset()
+        merged = merge_frozen(ss.frozen[:2])
+        dead = int(np.argmin(freqs))        # a term with no postings
+        assert freqs[dead] == 0
+        assert merged.postings(dead).size == 0
+        assert merged.docid_bounds(dead) == (0, 0, 0)
+
+    def test_non_adjacent_window_rejected(self):
+        ss, _ = _segset()
+        with pytest.raises(ValueError, match="adjacent"):
+            merge_frozen([ss.frozen[0], ss.frozen[2]])
+
+    def test_vocab_mismatch_rejected(self):
+        ss, _ = _segset()
+        a, b = ss.frozen[0], ss.frozen[1]
+        bad = dataclasses.replace(
+            b, offsets=np.concatenate([b.offsets, b.offsets[-1:]]))
+        with pytest.raises(ValueError, match="vocab"):
+            merge_frozen([a, bad])
+
+    def test_docid_overflow_rejected(self):
+        from repro.core import postings as post
+        big = dataclasses.replace(
+            seg_mod.FrozenSegment(offsets=np.zeros(VOCAB + 1, np.int64),
+                                  data=np.zeros(0, np.uint32),
+                                  n_docs=post.MAX_DOC, doc_base=0))
+        tail = dataclasses.replace(big, doc_base=post.MAX_DOC, n_docs=2)
+        with pytest.raises(OverflowError):
+            merge_frozen([big, tail])
+
+
+# ---------------------------------------------------------------------------
+# SegmentSet.compact edge cases
+# ---------------------------------------------------------------------------
+class TestSegmentSetCompact:
+    def test_k_larger_than_frozen_clamps(self):
+        ss, _ = _segset()
+        g = len(ss.frozen)
+        merged = ss.compact(g + 10)
+        assert merged is not None and len(ss.frozen) == 1
+        assert ss.frozen[0] is merged
+        invariants.check_segment_set(ss, layout=LAYOUT).raise_if_failed()
+
+    def test_single_segment_noop(self):
+        ss, _ = _segset(docs_per_segment=200, n_docs=240)
+        assert len(ss.frozen) == 1
+        assert ss.compact(4) is None
+        assert len(ss.frozen) == 1 and ss.n_compactions == 0
+
+    def test_no_frozen_noop(self):
+        ss = SegmentSet(LAYOUT, VOCAB, 10_000)
+        assert ss.compact(2) is None
+
+    def test_compact_a_compacted_segment(self):
+        """tier-2: merging a window that contains a tier-1 merge."""
+        ss, _ = _segset()
+        assert len(ss.frozen) >= 3
+        first = ss.compact(2)
+        assert first.tier == 1
+        again = ss.compact(2)               # window = [tier-1, tier-0]
+        assert again.tier == 2
+        assert ss.frozen[0] is again
+        invariants.check_segment_set(ss, layout=LAYOUT).raise_if_failed()
+
+    def test_compact_then_rollover_tiles(self):
+        ss, _ = _segset(docs_per_segment=60, n_docs=200)
+        ss.compact(2)
+        before = ss._doc_base
+        ss.ingest(np.asarray(synth.zipf_corpus(
+            synth.CorpusSpec(vocab=VOCAB, n_docs=60, seed=9))))
+        assert ss._doc_base > before        # a rollover happened
+        assert ss.frozen[-1].tier == 0      # fresh rollover is tier 0
+        invariants.check_segment_set(ss, layout=LAYOUT).raise_if_failed()
+
+    def test_policy_runs_to_fixpoint_and_bounds_g(self):
+        """G == popcount(#rollovers) under fanout 2 — O(log N)."""
+        docs, _ = _stream(4, 480)
+        ss = SegmentSet(LAYOUT, VOCAB, 60,
+                        compaction=CompactionPolicy(fanout=2))
+        for i in range(0, 480, 20):
+            ss.ingest(docs[i: i + 20])
+            n = ss.n_rollovers
+            assert len(ss.frozen) == bin(n).count("1"), (n, ss.frozen)
+            assert CompactionPolicy(fanout=2).plan(
+                [f.tier for f in ss.frozen]) is None
+        assert ss.n_rollovers == 8 and len(ss.frozen) == 1
+        invariants.check_segment_set(
+            ss, layout=LAYOUT, fanout=2).raise_if_failed()
+
+
+# ---------------------------------------------------------------------------
+# check_segment_set tier structure
+# ---------------------------------------------------------------------------
+class TestInvariantTierStructure:
+    def test_rejects_unreached_fixpoint(self):
+        ss, _ = _segset()                   # never compacted: all tier 0
+        assert len(ss.frozen) >= 2
+        rep = invariants.check_segment_set(ss, layout=LAYOUT, fanout=2)
+        assert not rep.ok
+        assert any("fixpoint" in v.message for v in rep.violations)
+        # the same set is fine without a policy
+        invariants.check_segment_set(ss, layout=LAYOUT).raise_if_failed()
+
+    def test_rejects_increasing_tiers(self):
+        ss, _ = _segset()
+        ss.compact(2, start=len(ss.frozen) - 2)  # newest window: [0.., 1]
+        tiers = [f.tier for f in ss.frozen]
+        assert tiers != sorted(tiers, reverse=True)
+        rep = invariants.check_segment_set(ss, layout=LAYOUT, fanout=2)
+        assert not rep.ok
+        assert any("non-increasing" in v.message for v in rep.violations)
+
+    def test_rejects_gap_in_tiling(self):
+        ss, _ = _segset()
+
+        class FakeSet:
+            frozen = [ss.frozen[0], ss.frozen[2]]   # hole where [1] was
+            max_segments = ss.max_segments
+            _doc_base = ss._doc_base
+        rep = invariants.check_segment_set(FakeSet, layout=LAYOUT)
+        assert not rep.ok
+        assert any("gap" in v.message for v in rep.violations)
+
+
+# ---------------------------------------------------------------------------
+# THE oracle: compacted engine == never-compacted engine, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine_pair():
+    docs, freqs = _stream(7, 640)
+    plain = _engine(freqs)
+    comp = _engine(freqs, validate=True,
+                   compaction=CompactionPolicy(fanout=2))
+    _feed([plain, comp], docs)
+    assert plain.stats.rollovers >= 3           # ISSUE: >= 3 rollovers
+    assert comp.stats.compactions >= 3
+    assert len(comp.segments.frozen) < len(plain.segments.frozen)
+    return plain, comp, freqs
+
+
+def _queries(freqs):
+    top = np.argsort(-freqs)
+    return [[int(top[0]), int(top[1])], [int(top[2])],
+            [int(top[1]), int(top[4]), int(top[9])],
+            [int(top[0]), VOCAB - 1], [int(top[3]), int(top[6])]]
+
+
+class TestCompactedOracle:
+    def test_batched_all_kinds(self, engine_pair):
+        plain, comp, freqs = engine_pair
+        qs = _queries(freqs)
+        for kind in ("conjunctive", "disjunctive"):
+            exp = getattr(plain, kind + "_batch")(qs)
+            got = getattr(comp, kind + "_batch")(qs)
+            for t, e, g in zip(qs, exp, got):
+                assert np.array_equal(e, g), (kind, t)
+        pairs = [(q[0], q[-1]) for q in qs]
+        for (t1, t2), e, g in zip(pairs, plain.phrase_batch(pairs),
+                                  comp.phrase_batch(pairs)):
+            assert np.array_equal(e, g), (t1, t2)
+
+    def test_sequential_oracle_path(self, engine_pair):
+        plain, comp, freqs = engine_pair
+        for e in (plain, comp):
+            e.batched = False
+        try:
+            for terms in _queries(freqs):
+                assert np.array_equal(plain.conjunctive(terms),
+                                      comp.conjunctive(terms)), terms
+                assert np.array_equal(plain.disjunctive(terms),
+                                      comp.disjunctive(terms)), terms
+        finally:
+            for e in (plain, comp):
+                e.batched = True
+
+    def test_topk_every_k(self, engine_pair):
+        plain, comp, freqs = engine_pair
+        for terms in _queries(freqs):
+            full = plain.conjunctive(terms)
+            for k in (1, 3, len(full), len(full) + 2):
+                assert np.array_equal(comp.topk_conjunctive(terms, k),
+                                      full[:k]), (terms, k)
+            assert np.array_equal(comp.conjunctive(terms, limit=5),
+                                  full[:5]), terms
+
+    def test_engine_compact_invalidates_query_stack(self, engine_pair):
+        """Manual engine.compact(k) between two identical queries must
+        rebuild the FrozenStack at the new G — and keep results
+        bit-identical."""
+        plain, _, freqs = engine_pair
+        docs, _ = _stream(7, 640)
+        eng = _engine(freqs)
+        _feed([eng], docs)
+        terms = _queries(freqs)[0]
+        before = eng.conjunctive(terms)
+        g_before = len(eng.frozen_packed)
+        stack_before = eng._frozen_stack()
+        merged = eng.compact(3)
+        assert merged is not None and merged.tier == 1
+        after = eng.conjunctive(terms)
+        assert np.array_equal(before, after)
+        assert len(eng.frozen_packed) == g_before - 2
+        assert eng._frozen_stack() is not stack_before
+        assert eng.stats.compactions == 1
+
+    def test_compaction_after_further_ingest_stays_identical(self):
+        """compaction -> rollover -> compaction interleaved with live
+        queries: the cascade must never desync query results."""
+        docs, freqs = _stream(13, 480)
+        plain = _engine(freqs, docs_per_segment=60)
+        comp = _engine(freqs, docs_per_segment=60, validate=True,
+                       compaction=CompactionPolicy(fanout=2))
+        top = np.argsort(-freqs)
+        terms = [int(top[0]), int(top[1])]
+        for i in range(0, 480, 20):
+            plain.ingest(docs[i: i + 20])
+            comp.ingest(docs[i: i + 20])
+            assert np.array_equal(plain.conjunctive(terms),
+                                  comp.conjunctive(terms)), i
+        assert comp.stats.rollovers == 8
+        assert len(comp.segments.frozen) == 1   # popcount(8)
+
+
+# ---------------------------------------------------------------------------
+# 4-shard equivalence (subprocess keeps forced host devices isolated)
+# ---------------------------------------------------------------------------
+SCRIPT_SHARDED = textwrap.dedent("""
+    from repro.dist import collectives as C
+    C.force_host_device_count(4)
+    import json
+    import numpy as np
+
+    from repro.analysis import invariants
+    from repro.core import analytical
+    from repro.core.lifecycle import (LifecycleEngine,
+                                      ShardedLifecycleEngine)
+    from repro.core.pointers import PoolLayout
+    from repro.core.segments import CompactionPolicy
+    from repro.core.sharded_index import make_doc_mesh
+    from repro.data import synth
+
+    Z = (1, 4, 7, 11)
+    layout = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 512, 64))
+    spec = synth.CorpusSpec(vocab=300, n_docs=480, seed=19)
+    docs = synth.zipf_corpus(spec)
+    freqs = synth.term_freqs(docs, spec.vocab)
+    fmax = int(freqs.max())
+    max_slices = int(analytical.slices_needed(Z, fmax)) + 1
+    max_len = 1 << (fmax - 1).bit_length()
+    mesh, rules = make_doc_mesh(4)
+
+    # 120-doc segments over 480 docs -> 4 rollovers; fanout 2 compacts
+    # the sharded frozen list down to popcount(4) = 1 segment.
+    single = LifecycleEngine(layout, spec.vocab, 120,
+                             max_slices=max_slices, max_len=max_len,
+                             use_kernel=False)
+    shard = ShardedLifecycleEngine(layout, spec.vocab, 120, mesh,
+                                   max_slices=max_slices, max_len=max_len,
+                                   rules=rules, use_kernel=False,
+                                   validate=True,
+                                   compaction=CompactionPolicy(fanout=2))
+    for i in range(0, 480, 40):
+        single.ingest(docs[i:i + 40])
+        shard.ingest(docs[i:i + 40])
+    assert single.stats.rollovers >= 3 and shard.stats.rollovers >= 3
+    assert shard.stats.compactions >= 3
+    assert len(shard.segments.frozen) == 1
+    assert shard.segments.frozen[0].tier == 2
+    invariants.check_segment_set(shard.segments, layout=layout,
+                                 fanout=2).raise_if_failed()
+
+    top = np.argsort(-freqs)
+    queries = [[int(top[0]), int(top[1])], [int(top[2]), int(top[5])],
+               [int(top[9])], [int(top[1]), int(top[3]), int(top[7])],
+               [int(top[0]), 299]]
+    n_checked = 0
+    for kind in ("conjunctive", "disjunctive"):
+        got_b = getattr(shard, kind + "_batch")(queries)
+        for terms, g in zip(queries, got_b):
+            shard.batched = False
+            exp_seq = getattr(shard, kind)(terms)
+            shard.batched = True
+            assert np.array_equal(g, exp_seq), (kind, terms)
+            assert np.array_equal(g, getattr(single, kind)(terms)), \\
+                (kind, terms)
+            n_checked += 1
+    pairs = [(int(top[0]), int(top[1])), (int(top[2]), int(top[0]))]
+    for (t1, t2), g in zip(pairs, shard.phrase_batch(pairs)):
+        assert np.array_equal(g, single.phrase(t1, t2)), (t1, t2)
+        n_checked += 1
+    for terms in queries:
+        full = single.conjunctive(terms)
+        for k in (1, 4, len(full) + 2):
+            assert np.array_equal(shard.topk_conjunctive(terms, k),
+                                  full[:k]), (terms, k)
+            n_checked += 1
+    print(json.dumps({"n_checked": n_checked}))
+""")
+
+
+def _run_subprocess(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_compacted_matches_single_device():
+    res = _run_subprocess(SCRIPT_SHARDED)
+    assert res["n_checked"] == 27

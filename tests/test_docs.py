@@ -1,0 +1,114 @@
+"""repro.analysis.docs unit tests + the repo-docs meta-test.
+
+The docs checker backs the CI ``docs`` job (README/docs code blocks
+stay runnable, relative links resolve).  Executing the marked blocks is
+the CI job's work; tier-1 only guards what is cheap and pure: the
+markdown parser, the link resolver, and — against the REAL repo docs —
+that every relative link resolves and every ``docs-ci`` block is a
+parseable bash/python block (so the CI job cannot fail on syntax).
+"""
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import docs as d
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _write(tmp_path, name, text):
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(text), encoding="utf-8")
+    return name
+
+
+# ---------------------------------------------------------------------------
+# parser
+# ---------------------------------------------------------------------------
+def test_parse_blocks_and_links(tmp_path):
+    name = _write(tmp_path, "doc.md", """\
+        see [a file](sub/x.py) and [the web](https://example.com).
+
+        ```bash docs-ci
+        echo hi
+        ```
+
+        ```python
+        ignored = "[not a](link)"
+        ```
+        """)
+    blocks, links = d.parse_markdown(str(tmp_path / name))
+    assert [(b.lang, b.marked) for b in blocks] == [("bash", True),
+                                                    ("python", False)]
+    assert blocks[0].text == "echo hi\n"
+    # links inside fences are literal code, never collected
+    assert links == [(1, "sub/x.py"), (1, "https://example.com")]
+
+
+def test_unterminated_fence_raises(tmp_path):
+    name = _write(tmp_path, "bad.md", "```bash\nnever closed\n")
+    with pytest.raises(ValueError, match="unterminated"):
+        d.parse_markdown(str(tmp_path / name))
+
+
+# ---------------------------------------------------------------------------
+# link checking
+# ---------------------------------------------------------------------------
+def test_check_links_resolves_relative_to_document(tmp_path):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "x.py").write_text("")
+    doc = _write(tmp_path, "docs/guide.md", """\
+        good: [x](../src/x.py) [anchor](#section) [web](https://a.b)
+        bad: [gone](../src/missing.py#frag)
+        """)
+    errors = d.check_links(doc, str(tmp_path))
+    assert len(errors) == 1
+    assert "missing.py" in errors[0] and errors[0].startswith("docs/guide.md:2")
+
+
+def test_run_blocks_reports_failures(tmp_path):
+    doc = _write(tmp_path, "r.md", """\
+        ```python docs-ci
+        print("ok")
+        ```
+
+        ```bash docs-ci
+        false
+        ```
+        """)
+    errors = d.run_blocks(doc, str(tmp_path))
+    assert len(errors) == 1 and "exited 1" in errors[0]
+
+
+# ---------------------------------------------------------------------------
+# the real repo docs
+# ---------------------------------------------------------------------------
+def test_repo_docs_exist():
+    assert d.default_docs(ROOT), "README.md / docs/ missing"
+    assert "README.md" in d.default_docs(ROOT)
+    assert os.path.join("docs", "lifecycle.md") in [
+        os.path.normpath(p) for p in d.default_docs(ROOT)]
+
+
+def test_repo_doc_links_resolve():
+    errors = []
+    for doc in d.default_docs(ROOT):
+        errors += d.check_links(doc, ROOT)
+    assert not errors, "\n".join(errors)
+
+
+def test_repo_docs_ci_blocks_parse():
+    """Every marked block must be bash or python, and python blocks must
+    at least compile — the CI docs job executes them for real."""
+    marked = []
+    for doc in d.default_docs(ROOT):
+        blocks, _ = d.parse_markdown(os.path.join(ROOT, doc))
+        marked += [b for b in blocks if b.marked]
+    assert marked, "no docs-ci blocks — the CI docs job would be a no-op"
+    for b in marked:
+        assert b.lang in ("bash", "python"), (b.path, b.line, b.lang)
+        assert b.text.strip(), (b.path, b.line)
+        if b.lang == "python":
+            compile(b.text, f"{b.path}:{b.line}", "exec")
