@@ -32,6 +32,8 @@ GUARDS = (
     ("ingest", "bulk_docs_s", "higher"),
     ("ingest", "bulk_vs_scan_speedup", "higher"),
     ("query", "batched_ms_per_q_q128", "lower"),
+    ("scored", "topk_ms_per_q_q128", "lower"),
+    ("scored", "block_skip_rate", "higher"),
 )
 
 

@@ -31,7 +31,8 @@ import traceback
 
 
 SUITES = ("analytical", "fig2", "fig3", "table1", "table2", "ingest",
-          "sharded", "lifecycle", "query", "paged_kv", "roofline")
+          "sharded", "lifecycle", "query", "scored", "paged_kv",
+          "roofline")
 
 
 def _jsonable(x):

@@ -45,7 +45,12 @@ Invariants enforced (the Goldilocks allocator's bookkeeping, paper
     ``offsets[-1] == len(data)``; per-term packed postings strictly
     increasing; docids within ``[0, n_docs)`` when the segment stores
     segment-relative docids; per-term ``docid_bounds`` agrees with the
-    data; ``freed_slices`` unique and within pool capacity.
+    data; ``freed_slices`` unique and within pool capacity.  With
+    ``scored=[(term, ScoredList), ...]`` it also re-derives each term's
+    per-doc tf from the positional CSR and checks the attached impact
+    plane quantizes it exactly (``min(tf, SCORE_MAX)`` per unique
+    docid, docids aligned) — the substrate the block-max skip bounds
+    stand on.
 ``check_segment_set``
     Frozen segments own disjoint ascending docid ranges tiling
     contiguously oldest-first (compacted segments cover their members'
@@ -60,7 +65,14 @@ Invariants enforced (the Goldilocks allocator's bookkeeping, paper
     Byte widths in {1, 2, 4}; ``woffs`` keep every SLAB_WORDS-word DMA
     in bounds; pad blocks (firsts == INVALID) decode to INVALID; valid
     lanes decode strictly ascending and pad lanes never sort below the
-    last valid docid.
+    last valid docid.  Also accepts a ``ScoredStack``: the docid stack
+    is validated as above, plus the score planes — valid lanes in
+    ``[1, SCORE_MAX]``, every lane past ``ns`` zero (pad lanes and pad
+    blocks contribute nothing to any block's bound), and each block-max
+    entry EQUAL to the max impact of its 128 lanes (a bmax below a
+    member lane breaks the skip-safety proof; above the true max it
+    only costs skips, but the builder writes the exact max so drift is
+    still a violation).
 """
 from __future__ import annotations
 
@@ -285,12 +297,20 @@ def check_pool_state(layout: PoolLayout, state) -> Report:
 # check_frozen_segment
 # ---------------------------------------------------------------------------
 def check_frozen_segment(seg, *, layout: Optional[PoolLayout] = None,
-                         relative_docids: bool = True) -> Report:
+                         relative_docids: bool = True,
+                         scored=None) -> Report:
     """Validate one :class:`~repro.core.segments.FrozenSegment` CSR.
 
     ``relative_docids=False`` for shard members of a
     ``ShardedFrozenSegment`` (their docids are global-within-segment via
     ``docid_map`` and legitimately exceed the shard-local ``n_docs``).
+
+    ``scored`` takes ``[(term, ScoredList), ...]`` pairs (e.g. from
+    ``PackedSegment.scored``) and cross-checks each impact plane
+    against the tf derived from this segment's positional CSR:
+    decoded docids must equal the term's unique docids (plus the
+    segment's ``doc_base``) and decoded impacts must equal
+    ``min(tf, SCORE_MAX)`` lane-for-lane.
     """
     from repro.core import postings as post
 
@@ -346,6 +366,39 @@ def check_frozen_segment(seg, *, layout: Optional[PoolLayout] = None,
                     or int(sl.max()) >= layout.slices_per_pool[p]):
                 rep.add("freed_slices", f"pool {p}: slice index outside "
                         f"[0, {layout.slices_per_pool[p]})")
+    if scored:
+        from repro.kernels.segment_intersect import (SCORE_MAX,
+                                                     decode_packed,
+                                                     decode_scores)
+        base = int(getattr(seg, "doc_base", 0))
+        n_scored = 0
+        for term, sl in scored:
+            term = int(term)
+            a, b = int(offsets[term]), int(offsets[term + 1])
+            uniq, cnt = np.unique(docids[a:b], return_counts=True)
+            want = np.minimum(cnt, SCORE_MAX).astype(np.int64)
+            n = int(sl.ids.n)
+            n_scored += 1
+            if n != uniq.size:
+                rep.add("scored", f"term {term}: impact plane holds {n} "
+                        f"docids but the CSR holds {uniq.size} unique "
+                        "docids")
+                continue
+            got_ids = np.asarray(decode_packed(sl.ids))[:n].astype(
+                np.int64) - base
+            if not np.array_equal(got_ids, uniq):
+                rep.add("scored", f"term {term}: packed docids disagree "
+                        "with the CSR's unique docids — impacts would "
+                        "score the wrong documents")
+                continue
+            got_sc = np.asarray(decode_scores(sl.swords)).reshape(-1)[
+                :n].astype(np.int64)
+            if not np.array_equal(got_sc, want):
+                i = int(np.argmax(got_sc != want))
+                rep.add("scored", f"term {term}: impact {int(got_sc[i])} "
+                        f"at lane {i} != min(tf, SCORE_MAX) = "
+                        f"{int(want[i])} from the positional CSR")
+        rep.stats["scored_terms_checked"] = n_scored
     rep.stats["terms_checked"] = n_terms
     rep.stats["postings"] = int(data.size)
     rep.stats["vocab"] = int(V)
@@ -440,11 +493,23 @@ def check_segment_set(segset, *, layout: Optional[PoolLayout] = None,
 def check_stacked_lists(s, *, decode: bool = True) -> Report:
     """Validate a :class:`~repro.kernels.segment_intersect.StackedLists`
     (any leading shape): legal byte widths, in-bounds DMA windows, pad
-    blocks decoding to INVALID, ascending valid lanes."""
-    from repro.kernels.segment_intersect import (SEG_BLOCK, SLAB_WORDS,
+    blocks decoding to INVALID, ascending valid lanes.  A
+    :class:`~repro.kernels.segment_intersect.ScoredStack` is accepted
+    too — its docid stack is validated identically, then the score
+    planes: valid lanes in ``[1, SCORE_MAX]``, lanes past ``ns`` zero,
+    per-block bmax equal to the block's lane max (and hence 0 on pad
+    blocks)."""
+    from repro.kernels.segment_intersect import (SCORE_MAX, SCORE_WORDS,
+                                                 SEG_BLOCK, SLAB_WORDS,
+                                                 decode_scores,
                                                  decode_stacked)
 
     rep = Report(check="stacked-lists")
+    swords = bmax = None
+    if hasattr(s, "swords"):          # ScoredStack: ids + score planes
+        swords = np.asarray(s.swords)
+        bmax = np.asarray(s.bmax)
+        s = s.ids
     firsts = np.asarray(s.firsts)
     bws = np.asarray(s.bws)
     woffs = np.asarray(s.woffs)
@@ -503,6 +568,41 @@ def check_stacked_lists(s, *, decode: bool = True) -> Report:
             r, b = [int(x[0]) for x in np.nonzero(bad)]
             rep.add("payload", f"row {r} block {b}: pad block decodes "
                     "to non-INVALID lanes")
+    if swords is not None:
+        if swords.shape[-1] != NB * SCORE_WORDS:
+            rep.add("swords", f"score plane width {swords.shape[-1]} != "
+                    f"{NB} blocks * {SCORE_WORDS} words")
+            return rep
+        if bmax.shape[-1] != NB:
+            rep.add("bmax", f"block-max width {bmax.shape[-1]} != "
+                    f"{NB} blocks")
+            return rep
+        sc = np.asarray(decode_scores(swords)).reshape(rows, NB,
+                                                       SEG_BLOCK)
+        bm = bmax.reshape(rows, NB).astype(np.int64)
+        lane = np.arange(NB * SEG_BLOCK).reshape(NB, SEG_BLOCK)
+        for r in range(rows):
+            valid = lane < int(n2[r])
+            v = sc[r][valid]
+            if v.size and (int(v.min()) < 1 or int(v.max()) > SCORE_MAX):
+                rep.add("swords", f"row {r}: valid-lane impact outside "
+                        f"[1, {SCORE_MAX}] — 0 is the no-hit sentinel, "
+                        "so a 0 impact would drop a real hit")
+            if np.any(sc[r][~valid] != 0):
+                rep.add("swords", f"row {r}: non-zero impact past "
+                        f"ns={int(n2[r])} — a pad lane would leak into "
+                        "the intersection scores")
+            want = sc[r].max(axis=1).astype(np.int64)
+            if not np.array_equal(bm[r], want):
+                b = int(np.argmax(bm[r] != want))
+                rel = "below" if bm[r][b] < want[b] else "above"
+                rep.add("bmax", f"row {r} block {b}: bmax "
+                        f"{int(bm[r][b])} {rel} the block's lane max "
+                        f"{int(want[b])}" + (
+                            " — the skip bound would drop docs that "
+                            "belong in the top-k" if rel == "below"
+                            else ""))
+        rep.stats["scored_rows"] = rows
     rep.stats["rows"] = rows
     rep.stats["pad_blocks"] = n_pad_blocks
     return rep

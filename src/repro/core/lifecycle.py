@@ -53,8 +53,9 @@ from repro.core import segments as seg_mod
 from repro.core import sharded_index as shx
 from repro.core import slicepool
 from repro.core.pointers import PoolLayout
-from repro.kernels.segment_intersect import (PackedList, decode_packed,
-                                             pack_docids)
+from repro.kernels.segment_intersect import (SCORE_MAX, PackedList,
+                                             ScoredList, attach_scores,
+                                             decode_packed, pack_docids)
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +80,8 @@ class PackedSegment:
         self.doc_base = int(seg.doc_base)
         self._packed: Dict[int, PackedList] = {}
         self._post: Dict[int, np.ndarray] = {}
+        self._tf: Dict[int, tuple] = {}
+        self._scored: Dict[int, ScoredList] = {}
 
     def docids_asc(self, term: int) -> np.ndarray:
         """Ascending GLOBAL docids of ``term`` in this segment."""
@@ -114,6 +117,36 @@ class PackedSegment:
                 got = np.sort(np.concatenate(
                     [sh.postings(term) for sh in self.seg.shards]))
             self._post[term] = got
+        return got
+
+    def tf_asc(self, term: int) -> tuple:
+        """``(docids int64 asc GLOBAL, tf int64)`` — the per-doc term
+        frequency of ``term`` in this segment, from the positional
+        postings (one posting per occurrence).  Cached like
+        :meth:`packed`; compaction rebuilds the CSR and thus recomputes
+        tf on the merged segment, so score planes survive merges."""
+        term = int(term)
+        got = self._tf.get(term)
+        if got is None:
+            p = self.postings_asc(term)
+            rel = (p >> np.uint32(post.POS_BITS)).astype(np.int64)
+            ids, tf = np.unique(rel, return_counts=True)
+            got = (ids + self.doc_base, tf.astype(np.int64))
+            self._tf[term] = got
+        return got
+
+    def scored(self, term: int) -> ScoredList:
+        """The term's :meth:`packed` list with the quantized-impact
+        plane attached: one ``min(tf, SCORE_MAX)`` uint8 per docid lane,
+        plus the per-128-docid-block max and the list max — the
+        block-max WAND substrate for :func:`qexec.frozen_scored_topk`."""
+        term = int(term)
+        got = self._scored.get(term)
+        if got is None:
+            _, tf = self.tf_asc(term)
+            imp = np.minimum(tf, SCORE_MAX).astype(np.int32)
+            got = attach_scores(self.packed(term), imp)
+            self._scored[term] = got
         return got
 
     def bounds(self, term: int) -> tuple:
@@ -182,6 +215,24 @@ def phrase_packed(pseg: PackedSegment, t1: int, t2: int) -> np.ndarray:
     return ids[::-1] + pseg.doc_base
 
 
+def scored_packed(pseg: PackedSegment, terms: Sequence[int]) -> tuple:
+    """Descending ``(docids int64, scores int64)`` of the conjunctive
+    scored query within one frozen segment — the pure-numpy oracle the
+    block-max path is proven bit-identical to.  Score is the summed
+    quantized impact ``min(tf, SCORE_MAX)`` over the query terms."""
+    its = [pseg.tf_asc(t) for t in terms]
+    ids = its[0][0]
+    for more, _ in its[1:]:
+        ids = np.intersect1d(ids, more)
+    if ids.size == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    sc = np.zeros(ids.size, np.int64)
+    for uids, tf in its:
+        pos = np.searchsorted(uids, ids)
+        sc += np.minimum(tf[pos], SCORE_MAX)
+    return ids[::-1].copy(), sc[::-1].copy()
+
+
 # ---------------------------------------------------------------------------
 # Unified engines: active pool + every frozen segment
 # ---------------------------------------------------------------------------
@@ -198,6 +249,11 @@ class LifecycleStats:
     compactions: int = 0
     high_water_slots: int = 0
     live_slots: int = 0
+    # block-max scored retrieval: frozen 128-docid blocks whose score
+    # upper bound could not beat the running top-k threshold (skipped
+    # without decoding) vs. blocks in structurally-live segments at all.
+    scored_blocks_skipped: int = 0
+    scored_blocks_live: int = 0
 
 
 class _LifecycleBase:
@@ -443,6 +499,116 @@ class _LifecycleBase:
                     for t in queries]
         return self._batch_topk(queries, k)
 
+    # -- queries: scored retrieval (block-max WAND / MaxScore) -----------
+    def scored_topk(self, terms: Sequence[int], k: int) -> tuple:
+        """The ``k`` best-scoring docs holding every term, ranked by
+        (summed quantized impact desc, docid desc — ties newest first),
+        as ``(docids int64[m], scores int64[m])``.  Frozen segments run
+        the block-max WAND walk: whole 128-docid blocks and whole
+        segments whose score upper bound cannot enter the current top-k
+        heap are skipped without decoding, and skip counts accumulate in
+        ``stats.scored_blocks_skipped`` / ``scored_blocks_live``.
+        Bit-identical to ``scored_full(terms)[:k]``."""
+        return self.scored_topk_batch([terms], k)[0]
+
+    def scored_topk_batch(self, queries: Sequence[Sequence[int]],
+                          k: int) -> List[tuple]:
+        if not self.batched:
+            return [self._scored_unified(t, int(k)) for t in queries]
+        return self._scored_batch(queries, int(k), full=False)
+
+    def scored_full(self, terms: Sequence[int],
+                    k: Optional[int] = None) -> tuple:
+        """Exhaustive scored evaluation (no early termination) — the
+        batched full-sort baseline ``scored_topk`` is measured against."""
+        return self.scored_full_batch([terms], k)[0]
+
+    def scored_full_batch(self, queries: Sequence[Sequence[int]],
+                          k: Optional[int] = None) -> List[tuple]:
+        if not self.batched:
+            return [self._scored_unified(t, k) for t in queries]
+        return self._scored_batch(queries, k, full=True)
+
+    def _scored_batch(self, queries: Sequence, k: Optional[int],
+                      full: bool) -> List[tuple]:
+        Q = len(queries)
+        if Q == 0:
+            return []
+        self._sync_frozen()   # pick up out-of-band compactions/rollovers
+        if not full:
+            if k <= 0:
+                return [(np.zeros(0, np.int64), np.zeros(0, np.int64))
+                        for _ in range(Q)]
+            if k > _TOPK_LIMIT_MAX:
+                # a generous cap, not a real top-k: full evaluation +
+                # slice beats compiling a pow2(k)-wide heap.
+                return [(i[:k], s[:k]) for i, s in
+                        self._scored_batch(queries, None, True)]
+        terms, n_terms = qexec.pad_query_batch(queries, self.max_query_len)
+        tb = min(qexec.bucket_pow2(int(n_terms.max()), 1),
+                 self.max_query_len)
+        base = self._base_u32()
+        ad, asc, an = self._active_scored_batch(terms, n_terms, tb)
+        stack = self._frozen_stack()
+        if full:
+            if stack is None:
+                ids, scs, n = qexec.finalize_scored(
+                    ad, asc, an, jnp.asarray(n_terms), base)
+            else:
+                sc, _, _ = stack.gather_scored(terms[:, :tb], n_terms)
+                ids, scs, n = qexec.frozen_scored_merge(
+                    ad, asc, an, sc, jnp.asarray(n_terms), base,
+                    nt_slots=tb, kernel=self._batched_kernel,
+                    interpret=self.interpret)
+                ids, scs, n = qexec.rank_scored(ids, scs, n)
+            D, S, N = np.asarray(ids), np.asarray(scs), np.asarray(n)
+            lim = None if k is None else int(k)
+            return [(D[i, : int(N[i])].astype(np.int64)[:lim],
+                     S[i, : int(N[i])].astype(np.int64)[:lim])
+                    for i in range(Q)]
+        k_pad = qexec.bucket_pow2(k, floor=8)
+        if stack is None:
+            ids, scs, n = qexec.finalize_scored(
+                ad, asc, an, jnp.asarray(n_terms), base)
+        else:
+            sc, lasts, smax = stack.gather_scored(terms[:, :tb], n_terms)
+            ids, scs, n, bskip, blive = qexec.frozen_scored_topk(
+                ad, asc, an, sc, jnp.asarray(n_terms), base, lasts, smax,
+                jnp.int32(k), nt_slots=tb, k_pad=k_pad)
+            self.stats.scored_blocks_skipped += int(jnp.sum(bskip))
+            self.stats.scored_blocks_live += int(jnp.sum(blive))
+        D, S, N = np.asarray(ids), np.asarray(scs), np.asarray(n)
+        return [(D[i, : min(int(N[i]), k)].astype(np.int64),
+                 S[i, : min(int(N[i]), k)].astype(np.int64))
+                for i in range(Q)]
+
+    def _scored_unified(self, terms: Sequence[int],
+                        k: Optional[int]) -> tuple:
+        """Per-query host-loop scored oracle (``batched=False``): active
+        scores from the jitted engine, one numpy ``scored_packed`` per
+        frozen segment, one stable full sort.  No early termination —
+        the exactness reference for ``scored_topk``."""
+        self._sync_frozen()
+        tmat, n_terms = qexec.pad_query_batch([tuple(terms)],
+                                              self.max_query_len)
+        tb = min(qexec.bucket_pow2(int(n_terms.max()), 1),
+                 self.max_query_len)
+        ad, asc, an = self._active_scored_batch(tmat, n_terms, tb)
+        n0 = int(an[0])
+        ids = [np.asarray(ad[0])[:n0].astype(np.int64) + self.doc_base]
+        scs = [np.asarray(asc[0])[:n0].astype(np.int64)]
+        for pseg in reversed(self._packed):   # newest frozen first
+            i, s = scored_packed(pseg, terms)
+            ids.append(i)
+            scs.append(s)
+        flat_i = np.concatenate(ids)
+        flat_s = np.concatenate(scs)
+        order = np.lexsort((-flat_i, -flat_s))  # score desc, docid desc
+        flat_i, flat_s = flat_i[order], flat_s[order]
+        if k is not None:
+            flat_i, flat_s = flat_i[:k], flat_s[:k]
+        return flat_i, flat_s
+
     # -- queries: per-query host-loop oracle (batched=False) -------------
     def _unified(self, kind: str, terms: Sequence[int],
                  limit: Optional[int]) -> np.ndarray:
@@ -547,6 +713,12 @@ class LifecycleEngine(_LifecycleBase):
         return fn(self.segments.active.state, jnp.asarray(terms[:, :tb]),
                   jnp.asarray(n_terms), jnp.int32(min(k, k_pad)))
 
+    def _active_scored_batch(self, terms, n_terms, tb: int):
+        fn = qexec.make_active_scored_fn(self.layout, self.max_slices,
+                                         self.max_len, tb)
+        return fn(self.segments.active.state, jnp.asarray(terms[:, :tb]),
+                  jnp.asarray(n_terms))
+
     def _active_desc(self, kind: str, terms: Sequence[int]) -> np.ndarray:
         state = self.segments.active.state
         if kind == "phrase":
@@ -621,6 +793,14 @@ class ShardedLifecycleEngine(_LifecycleBase):
         # frozen while_loop, which still early-exits across segments.
         desc, n = self._active_batch("conjunctive", terms, n_terms, tb)
         return desc, jnp.minimum(n, jnp.int32(k))
+
+    def _active_scored_batch(self, terms, n_terms, _tb: int):
+        # full max_query_len width, like _active_batch: the shard_map
+        # engine is compiled for it; only the frozen stack trims.
+        state = self.segments.active.state
+        return self.engine.conjunctive_scored(
+            state, jnp.asarray(terms, jnp.uint32),
+            jnp.asarray(n_terms, jnp.int32))
 
     def _active_desc(self, kind: str, terms: Sequence[int]) -> np.ndarray:
         state = self.segments.active.state

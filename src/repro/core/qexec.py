@@ -52,11 +52,13 @@ from repro.core import postings as post
 from repro.core import query as q
 from repro.core import slicepool
 from repro.core.pointers import PoolLayout
-from repro.core.sharded_index import merge_desc
-from repro.kernels.segment_intersect import (SEG_BLOCK, StackedLists,
-                                             _pow2, decode_stacked,
-                                             pack_docids, repad_stacked,
-                                             stack_packed)
+from repro.core.sharded_index import merge_desc, merge_desc_scored
+from repro.kernels.segment_intersect import (SEG_BLOCK, ScoredStack,
+                                             StackedLists, _pow2,
+                                             decode_scores, decode_stacked,
+                                             pack_docids, pack_scored,
+                                             repad_scored, repad_stacked,
+                                             stack_packed, stack_scored)
 
 INVALID = q.INVALID
 
@@ -93,6 +95,13 @@ class FrozenStack:
         self._terms: Dict[int, Tuple[StackedLists, np.ndarray]] = {}
         self._posts: Dict[int, np.ndarray] = {}
         self._empty: Optional[Tuple[StackedLists, np.ndarray]] = None
+        # scored stacks: (ScoredStack, lasts, smax) per term — the smax
+        # column is the per-(term, segment) max-impact summary the
+        # segment-level WAND skip consumes.
+        self._sterms: Dict[int, Tuple[ScoredStack, np.ndarray,
+                                      np.ndarray]] = {}
+        self._sempty: Optional[Tuple[ScoredStack, np.ndarray,
+                                     np.ndarray]] = None
 
     @property
     def n_segments(self) -> int:
@@ -120,6 +129,31 @@ class FrozenStack:
                                for _ in self.psegs])
             self._empty = (st, np.zeros(self.n_segments, np.uint32))
         return self._empty
+
+    def _scored_term(self, term: int
+                     ) -> Tuple[ScoredStack, np.ndarray, np.ndarray]:
+        got = self._sterms.get(term)
+        if got is None:
+            scs = [p.scored(term) for p in self.psegs]
+            st = stack_scored(scs)
+            lasts = np.zeros(self.n_segments, np.uint32)
+            smax = np.zeros(self.n_segments, np.int32)
+            for g, p in enumerate(self.psegs):
+                c, _, last = p.bounds(term)
+                lasts[g] = last if c else 0
+                smax[g] = scs[g].smax
+            got = (st, lasts, smax)
+            self._sterms[term] = got
+        return got
+
+    def _empty_scored(self) -> Tuple[ScoredStack, np.ndarray, np.ndarray]:
+        if self._sempty is None:
+            st = stack_scored([pack_scored(np.zeros(0, np.uint32),
+                                           np.zeros(0, np.int32))
+                               for _ in self.psegs])
+            self._sempty = (st, np.zeros(self.n_segments, np.uint32),
+                            np.zeros(self.n_segments, np.int32))
+        return self._sempty
 
     def _post_stack(self, term: int) -> np.ndarray:
         got = self._posts.get(term)
@@ -156,6 +190,35 @@ class FrozenStack:
             for f in StackedLists._fields])
         lasts = np.stack([np.stack([c[1] for c in row]) for row in cells])
         return (jax.tree.map(jnp.asarray, leaves), jnp.asarray(lasts))
+
+    def gather_scored(self, terms: np.ndarray, n_terms: np.ndarray
+                      ) -> Tuple[ScoredStack, jax.Array, jax.Array]:
+        """Scored counterpart of :meth:`gather`: returns ``(ScoredStack
+        with [Q, T, G, ...] leaves, lasts uint32[Q, T, G],
+        smax int32[Q, T, G])`` — docid stacks plus impact planes,
+        block-max planes and the per-(term, segment) max-impact summary.
+        """
+        cells = [[self._scored_term(int(t)) if j < int(n)
+                  else self._empty_scored()
+                  for j, t in enumerate(row)]
+                 for row, n in zip(terms, n_terms)]
+        nb = bucket_pow2(max(c[0].ids.n_blocks
+                             for row in cells for c in row))
+        pw = bucket_pow2(max(c[0].ids.n_words
+                             for row in cells for c in row))
+        rows = [[repad_scored(c[0], nb, pw) for c in row] for row in cells]
+        ids = StackedLists(*[
+            np.stack([np.stack([getattr(c.ids, f) for c in row])
+                      for row in rows])
+            for f in StackedLists._fields])
+        swords = np.stack([np.stack([c.swords for c in row])
+                           for row in rows])
+        bmax = np.stack([np.stack([c.bmax for c in row]) for row in rows])
+        leaves = ScoredStack(ids=ids, swords=swords, bmax=bmax)
+        lasts = np.stack([np.stack([c[1] for c in row]) for row in cells])
+        smax = np.stack([np.stack([c[2] for c in row]) for row in cells])
+        return (jax.tree.map(jnp.asarray, leaves), jnp.asarray(lasts),
+                jnp.asarray(smax))
 
     def gather_postings(self, t1s: np.ndarray, t2s: np.ndarray,
                         n_live: Optional[int] = None
@@ -400,7 +463,285 @@ def frozen_topk(active_desc, active_n, lists: StackedLists, n_terms,
                                                   n_terms, lasts_doc)
 
 
-@functools.lru_cache(maxsize=None)
+# ---------------------------------------------------------------------------
+# Scored retrieval: block-max WAND / MaxScore over the frozen stack
+# ---------------------------------------------------------------------------
+def _rank_scored(ids, scores):
+    """Sort lanes by (score desc, docid desc); INVALID lanes last.
+
+    One stable two-key ``lax.sort``: key1 flips the score (impacts are
+    tiny — at most max_query_len * SCORE_MAX — so the flip never wraps),
+    key2 flips the docid, and INVALID lanes force both keys to the max.
+    Score ties therefore resolve newest-doc-first, which is what makes
+    banking newest-segment-first exact under early termination."""
+    valid = ids != INVALID
+    k1 = jnp.where(valid,
+                   jnp.uint32(0x7FFFFFFF) - scores.astype(jnp.uint32),
+                   jnp.uint32(0xFFFFFFFF))
+    k2 = jnp.where(valid, jnp.uint32(0xFFFFFFFF) - ids,
+                   jnp.uint32(0xFFFFFFFF))
+    _, _, ids_s, sc_s = jax.lax.sort((k1, k2, ids, scores), num_keys=2,
+                                     is_stable=True)
+    return ids_s, sc_s
+
+
+def _fold_scored(ids_tg, scs_tg, nt, nt_slots, sc01=None):
+    """Scored conjunctive fold over one (query, segment) cell: ``[T, W]``
+    decoded docids + impact lanes -> (hit bool[W], score int32[W]) on
+    term 0's lanes.  ``sc01`` optionally injects the kernel-computed
+    (term0 + term1) impact sums (0 = no hit) for the driving pair."""
+    cand = ids_tg[0]
+    if sc01 is None:
+        hit = cand != INVALID
+        score = scs_tg[0]
+        start = 1
+    else:
+        use1 = jnp.int32(1) < nt
+        hit = jnp.where(use1, sc01 > 0, cand != INVALID)
+        score = jnp.where(use1, sc01, scs_tg[0])
+        start = 2
+    for j in range(start, nt_slots):
+        use = j < nt
+        pos = jnp.minimum(jnp.searchsorted(ids_tg[j], cand),
+                          cand.shape[0] - 1)
+        m = (ids_tg[j][pos] == cand) & (cand != INVALID)
+        hit = hit & jnp.where(use, m, True)
+        score = score + jnp.where(use & m, scs_tg[j][pos], 0)
+    return hit & (cand != INVALID), score
+
+
+def _merge_parts_scored(active_desc, active_sc, active_n, desc_seg,
+                        sc_seg, n_seg, live, base):
+    Q, A = active_desc.shape
+    G, W = desc_seg.shape[1], desc_seg.shape[2]
+    an = jnp.where(live, active_n, 0)
+    alane = jnp.arange(A)[None, :] < an[:, None]
+    a_glob = jnp.where(alane, active_desc + base, INVALID)
+    a_sc = jnp.where(alane, active_sc, 0)
+    nseg = jnp.where(live[:, None], n_seg, 0)
+    mseg = jnp.arange(W)[None, None, :] < nseg[..., None]
+    dseg = jnp.where(mseg, desc_seg, INVALID)
+    sseg = jnp.where(mseg, sc_seg, 0)
+    flat = jnp.concatenate([a_glob, dseg.reshape(Q, G * W)], axis=1)
+    flat_sc = jnp.concatenate([a_sc, sseg.reshape(Q, G * W)], axis=1)
+    ids, scs = jax.vmap(merge_desc_scored)(flat, flat_sc)
+    return ids, scs, an + jnp.sum(nseg, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("nt_slots", "kernel",
+                                             "interpret"))
+def frozen_scored_merge(active_desc, active_sc, active_n,
+                        sc: ScoredStack, n_terms, base, *, nt_slots: int,
+                        kernel: bool = False, interpret=None):
+    """FULL scored conjunctive evaluation over the frozen stack in one
+    dispatch (no early termination — the exhaustive baseline scored
+    top-k is proven bit-identical to).  Returns globally-descending
+    ``(ids uint32[Q, A + G * W], scores int32[Q, ...], n int32[Q])``;
+    rank by score afterwards with :func:`rank_scored`.
+
+    ``kernel=True`` routes the driving (term0, term1) scored
+    intersection of every (query, segment) pair through the batched
+    scored Pallas kernel with skipping disabled (th = -1)."""
+    from repro.kernels import ops
+    lists = sc.ids
+    Q, T, G, _ = lists.firsts.shape
+    W = lists.n_blocks * SEG_BLOCK
+    ids = decode_stacked(lists)                        # [Q, T, G, W]
+    scs = decode_scores(sc.swords)                     # [Q, T, G, W]
+
+    sc01 = None
+    if kernel and nt_slots >= 2:
+        def flat(x, t):
+            return x[:, t].reshape((Q * G,) + x.shape[3:])
+
+        def slot_stack(t):
+            st = StackedLists(*[flat(getattr(lists, f), t)
+                                for f in StackedLists._fields[:-1]],
+                              ns=lists.ns[:, t].reshape(Q * G))
+            return ScoredStack(ids=st, swords=flat(sc.swords, t),
+                               bmax=flat(sc.bmax, t))
+        out = ops.scored_intersect_batched(
+            slot_stack(0), slot_stack(1),
+            jnp.zeros((Q * G,), jnp.int32),
+            jnp.full((Q * G,), -1, jnp.int32),
+            use_kernel=True, interpret=interpret)
+        sc01 = out.reshape(Q, G, W)
+
+    def per_seg(ids_tg, scs_tg, nt, sc01_g):
+        hit, score = _fold_scored(ids_tg, scs_tg, nt, nt_slots, sc01_g)
+        comp_ids, n = q._compact(ids_tg[0], hit)
+        comp_sc, _ = q._compact(score, hit, fill=jnp.int32(0))
+        return (q.flip_valid(comp_ids, n, INVALID),
+                q.flip_valid(comp_sc, n, jnp.int32(0)), n)
+
+    if sc01 is None:
+        sc01 = jnp.zeros((Q, G, W), jnp.int32)  # unused placeholder
+
+        def per_seg_(i, s, nt, h):
+            return per_seg(i, s, nt, None)
+    else:
+        per_seg_ = per_seg
+    per_q = jax.vmap(per_seg_, in_axes=(1, 1, None, 0))
+    desc_seg, sc_seg, n_seg = jax.vmap(per_q)(ids, scs, n_terms, sc01)
+    live = n_terms > 0
+    return _merge_parts_scored(active_desc, active_sc, active_n,
+                               desc_seg, sc_seg, n_seg, live, base)
+
+
+@jax.jit
+def rank_scored(ids, scores, n):
+    """Re-rank docid-descending scored rows by (score desc, docid desc)."""
+    W = ids.shape[1]
+    m = jnp.arange(W)[None, :] < n[:, None]
+    ids = jnp.where(m, ids, INVALID)
+    scores = jnp.where(m, scores, 0)
+    ids_s, sc_s = jax.vmap(_rank_scored)(ids, scores)
+    return ids_s, sc_s, n
+
+
+@jax.jit
+def finalize_scored(active_desc, active_sc, active_n, live, base):
+    """No-frozen-segments fast path: globalise, mask and rank the
+    active batch by (score desc, docid desc)."""
+    an = jnp.where(live > 0, active_n, 0)
+    A = active_desc.shape[1]
+    m = jnp.arange(A)[None, :] < an[:, None]
+    ids = jnp.where(m, active_desc + base, INVALID)
+    scs = jnp.where(m, active_sc, 0)
+    ids_s, sc_s = jax.vmap(_rank_scored)(ids, scs)
+    return ids_s, sc_s, an
+
+
+@functools.partial(jax.jit, static_argnames=("nt_slots", "k_pad"))
+def frozen_scored_topk(active_desc, active_sc, active_n, sc: ScoredStack,
+                       n_terms, base, lasts_doc, smax, k, *,
+                       nt_slots: int, k_pad: int):
+    """Block-max WAND / MaxScore top-k over the frozen stack.
+
+    Walks segments newest-first keeping a ``k_pad``-wide heap of the
+    best (score desc, docid desc) candidates.  Three skip levels, each
+    justified by an upper bound that cannot beat the heap threshold
+    ``th`` (the current k-th best score once ``k`` candidates have been
+    seen; -1 before that, which disables skipping):
+
+      * segment-structural — empty term list or disjoint first/last
+        docid ranges (the existing recency-top-k summaries);
+      * segment-score — sum of the live terms' per-(term, segment) max
+        impacts ``smax`` is <= th;
+      * block-score — a driving-term block whose block-max plus the
+        other terms' segment maxima is <= th contributes nothing.
+
+    Dropped candidates score <= th <= the final k-th score, and on
+    equality every heap incumbent is from a NEWER segment (larger
+    docid), so they rank past k either way — bit-identical to ranking
+    the full evaluation (tests/test_scored.py proves it for every k).
+    Unlike recency top-k the walk cannot stop at ``b == k``: an older
+    segment may still score higher, so early termination here IS the
+    skipping, and the loop visits (but mostly skips) every segment.
+
+    Returns ``(ids uint32[Q, k_pad], scores int32[Q, k_pad],
+    n int32[Q], blocks_skipped int32[Q], blocks_live int32[Q])`` — the
+    block counters feed the bench's skip-rate metric (driving-term
+    blocks of structurally-live segments only).
+    """
+    lists = sc.ids
+    Q, T, G, _ = lists.firsts.shape
+    NB = lists.n_blocks
+    W = NB * SEG_BLOCK
+    an = jnp.where(n_terms > 0, active_n, 0)
+    A = active_desc.shape[1]
+    m = jnp.arange(A)[None, :] < an[:, None]
+    a_ids = jnp.where(m, active_desc + base, INVALID)
+    a_sc = jnp.where(m, active_sc, 0)
+    if A < k_pad:
+        pad = k_pad - A
+        a_ids = jnp.concatenate(
+            [a_ids, jnp.full((Q, pad), INVALID, a_ids.dtype)], axis=1)
+        a_sc = jnp.concatenate(
+            [a_sc, jnp.zeros((Q, pad), jnp.int32)], axis=1)
+    hi0, hs0 = jax.vmap(_rank_scored)(a_ids, a_sc)
+    heap_ids0, heap_sc0 = hi0[:, :k_pad], hs0[:, :k_pad]
+    b0 = jnp.minimum(an, k)
+
+    def one(hid_i, hsc_i, b_i, leaves_q, nt, ld_q, sm_q):
+        fd_q = leaves_q.ids.firsts[..., 0]      # [T, G] first docids
+
+        def body(i, c):
+            hid, hsc, b, bskip, blive = c
+            g = G - 1 - i                       # newest segment first
+            seg = jax.tree.map(lambda x: x[:, g], leaves_q)
+            ns_g = jnp.asarray(seg.ids.ns)
+            slot = jnp.arange(nt_slots) < nt
+            nonempty = jnp.all(jnp.where(slot, ns_g > 0, True)) & (nt > 0)
+            lo = jnp.max(jnp.where(slot, fd_q[:, g], jnp.uint32(0)))
+            hi = jnp.min(jnp.where(slot, ld_q[:, g],
+                                   jnp.uint32(INVALID - jnp.uint32(1))))
+            live_g = nonempty & (lo <= hi)
+            ub_g = jnp.sum(jnp.where(slot, sm_q[:, g], 0))
+            th = jnp.where(b >= k, hsc[jnp.maximum(k - 1, 0)],
+                           jnp.int32(-1))
+            eval_g = live_g & (ub_g > th)
+            rest = jnp.sum(jnp.where(slot & (jnp.arange(nt_slots) > 0),
+                                     sm_q[:, g], 0))
+            nblk0 = (ns_g[0] + SEG_BLOCK - 1) // SEG_BLOCK
+            blive = blive + jnp.where(live_g, nblk0, 0)
+            bskip = bskip + jnp.where(live_g & ~eval_g, nblk0, 0)
+
+            def eval_seg(_):
+                ids = decode_stacked(seg.ids)       # [T, W]
+                scs = decode_scores(seg.swords)     # [T, W]
+                hit, score = _fold_scored(ids, scs, nt, nt_slots)
+                blk_ok = (seg.bmax[0] + rest) > th  # [NB]
+                keep = hit & jnp.repeat(blk_ok, SEG_BLOCK)
+                real_blk = (jnp.arange(NB) * SEG_BLOCK) < ns_g[0]
+                nskip = jnp.sum((~blk_ok & real_blk).astype(jnp.int32))
+                cid = jnp.where(keep, ids[0], INVALID)
+                csc = jnp.where(keep, score, 0)
+                return cid, csc, jnp.sum(keep.astype(jnp.int32)), nskip
+
+            cid, csc, nh, nskip = jax.lax.cond(
+                eval_g, eval_seg,
+                lambda _: (jnp.full((W,), INVALID, jnp.uint32),
+                           jnp.zeros((W,), jnp.int32), jnp.int32(0),
+                           jnp.int32(0)),
+                None)
+            bskip = bskip + nskip
+            mi_s, ms_s = _rank_scored(jnp.concatenate([hid, cid]),
+                                      jnp.concatenate([hsc, csc]))
+            return (mi_s[:k_pad], ms_s[:k_pad],
+                    jnp.minimum(k, b + nh), bskip, blive)
+
+        hid, hsc, b, bskip, blive = jax.lax.fori_loop(
+            0, G, body, (hid_i, hsc_i, b_i, jnp.int32(0), jnp.int32(0)))
+        lane = jnp.arange(k_pad)
+        return (jnp.where(lane < b, hid, INVALID),
+                jnp.where(lane < b, hsc, 0), b, bskip, blive)
+
+    return jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, 0))(
+        heap_ids0, heap_sc0, b0, sc, n_terms, lasts_doc, smax)
+
+
+@functools.lru_cache(maxsize=slicepool.FACTORY_CACHE_SIZE)
+def make_active_scored_fn(layout: PoolLayout, max_slices: int,
+                          max_len: int, max_query_len: int = 8):
+    """Batched scored-conjunctive evaluation over the ACTIVE pool: vmap
+    of the engine's ``conjunctive_scored_asc``, flipped to descending
+    with the score lanes kept doc-aligned.  Returns SEGMENT-RELATIVE
+    ``(desc uint32[Q, W], scores int32[Q, W], n int32[Q])``."""
+    eng = q.make_engine(layout, max_slices, max_len, max_query_len)
+
+    @jax.jit
+    def run(state, terms, n_terms):
+        def one(trow, nt):
+            asc, sc, n = eng.conjunctive_scored_asc(state, trow, nt)
+            return (q.asc_to_desc(asc, n),
+                    q.flip_valid(sc, n, jnp.int32(0)), n)
+        return jax.vmap(one)(terms, n_terms)
+
+    return run
+
+
+@functools.lru_cache(maxsize=slicepool.FACTORY_CACHE_SIZE)
 def make_active_topk_fn(layout: PoolLayout, max_slices: int, max_len: int,
                         max_query_len: int = 8, k_pad: int = 8,
                         tile: int = 128):
@@ -476,7 +817,7 @@ def make_active_topk_fn(layout: PoolLayout, max_slices: int, max_len: int,
 # Batched active evaluation (single-device; the sharded engine is
 # already batched — see sharded_index.make_sharded_engine)
 # ---------------------------------------------------------------------------
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=slicepool.FACTORY_CACHE_SIZE)
 def make_active_fn(layout: PoolLayout, max_slices: int, max_len: int,
                    max_query_len: int, kind: str):
     """One jitted dispatch for a whole query batch over the active pool:

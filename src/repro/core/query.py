@@ -26,8 +26,10 @@ import jax.numpy as jnp
 from repro.core import postings as post
 from repro.core import slicepool
 from repro.core.pointers import PoolLayout
+from repro.kernels.segment_intersect import SCORE_MAX
 
 INVALID = jnp.uint32(0xFFFFFFFF)
+FACTORY_CACHE_SIZE = slicepool.FACTORY_CACHE_SIZE
 
 
 def _compact(values, keep, fill=INVALID):
@@ -39,16 +41,23 @@ def _compact(values, keep, fill=INVALID):
     return out, jnp.sum(keep.astype(jnp.int32))
 
 
+def flip_valid(xs, n, fill):
+    """Reverse the valid prefix of ``xs``; pad with ``fill`` past ``n``.
+    The alignment-preserving flip: applying it to a docid array and a
+    parallel score array keeps lane i of each referring to one doc."""
+    m = xs.shape[0]
+    idx = n - 1 - jnp.arange(m)
+    vals = xs[jnp.clip(idx, 0, m - 1)]
+    return jnp.where(jnp.arange(m) < n, vals, fill)
+
+
 def desc_to_asc(desc, n):
     """Flip the valid prefix of a descending array; INVALID padding at end."""
-    m = desc.shape[0]
-    idx = n - 1 - jnp.arange(m)
-    vals = desc[jnp.clip(idx, 0, m - 1)]
-    return jnp.where(jnp.arange(m) < n, vals, INVALID)
+    return flip_valid(desc, n, INVALID)
 
 
 def asc_to_desc(asc, n):
-    return desc_to_asc(asc, n)  # same index reversal
+    return flip_valid(asc, n, INVALID)  # same index reversal
 
 
 def dedup_asc(xs):
@@ -101,9 +110,12 @@ class QueryEngine(NamedTuple):
     conjunctive_asc: callable   # (state, terms, n_terms) -> (asc, n)
     disjunctive_asc: callable   # (state, terms, n_terms) -> (asc, n)
     phrase_asc: callable        # (state, t1, t2) -> (asc ids, n)
+    conjunctive_scored_asc: callable  # (state, terms, n_terms) ->
+                                #    (asc, score int32, n): quantized
+                                #    impact sum min(tf, SCORE_MAX) per term
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=FACTORY_CACHE_SIZE)
 def make_engine(layout: PoolLayout, max_slices: int, max_len: int,
                 max_query_len: int = 8, *, use_kernel: bool = False,
                 interpret: bool = None) -> QueryEngine:
@@ -223,6 +235,29 @@ def make_engine(layout: PoolLayout, max_slices: int, max_len: int,
         desc, n = conjunctive(state, terms, n_terms)
         return desc[:k], jnp.minimum(n, k)
 
+    def conjunctive_scored_asc(state, terms, n_terms):
+        """Conjunctive docids plus their summed quantized impacts
+        (min(tf, SCORE_MAX) per live term).  tf per candidate is the
+        occurrence count in the term's raw postings — two searchsorted
+        bounds over the sorted docid lanes, no per-doc loop."""
+        acc, na = conjunctive_asc(state, terms, n_terms)
+
+        def body(i, score):
+            use = i < n_terms
+            plist, n = materialize(state, terms[i])
+            ids = post.docid(plist)
+            ids = jnp.sort(jnp.where(jnp.arange(max_len) < n, ids,
+                                     INVALID))
+            lo = jnp.searchsorted(ids, acc, side="left")
+            hi = jnp.searchsorted(ids, acc, side="right")
+            imp = jnp.minimum((hi - lo).astype(jnp.int32), SCORE_MAX)
+            return score + jnp.where(use & (acc != INVALID), imp, 0)
+
+        score = jax.lax.fori_loop(0, max_query_len, body,
+                                  jnp.zeros(acc.shape, jnp.int32))
+        return acc, score, na
+
     return QueryEngine(postings_desc, docids_asc, conjunctive,
                        disjunctive, phrase, read_all, topk_conjunctive,
-                       conjunctive_asc, disjunctive_asc, phrase_asc)
+                       conjunctive_asc, disjunctive_asc, phrase_asc,
+                       conjunctive_scored_asc)

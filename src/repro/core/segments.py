@@ -377,6 +377,7 @@ class SegmentSet:
         self.n_compactions = 0
         self.active = self._new_active()
         self._doc_base = 0
+        self._hist_freqs: Optional[np.ndarray] = None
 
     def _new_active(self, state=None) -> ActiveSegment:
         return ActiveSegment(self.layout, self.vocab_size,
@@ -396,6 +397,10 @@ class SegmentSet:
         With a :class:`CompactionPolicy` attached, same-tier frozen
         segments then cascade-merge so G stays O(log N)."""
         fz = freeze(self.active, doc_base=self._doc_base)
+        # H(t) snapshot: the freqs of THIS rollover, taken before any
+        # compaction can merge the segment into a multi-rollover tier
+        # (history_freqs must keep meaning "the last rollover").
+        self._hist_freqs = fz.term_freqs()
         self.frozen.append(fz)
         self.n_rollovers += 1
         if len(self.frozen) > self.max_segments - 1:
@@ -437,17 +442,26 @@ class SegmentSet:
             self.compact(plan[1], start=plan[0])
 
     def history_freqs(self) -> np.ndarray:
-        """H(t) from the most recent frozen segment (paper §7)."""
-        if not self.frozen:
+        """H(t) from the most recent ROLLOVER (paper §7) — a snapshot
+        taken at freeze time, so a compaction that merges the newest
+        frozen segment into a multi-rollover tier cannot silently widen
+        the signal's window."""
+        if self._hist_freqs is None:
             return np.zeros(self.vocab_size, np.int64)
-        return self.frozen[-1].term_freqs()
+        return self._hist_freqs.copy()
 
     def search_term_desc(self, term: int, engine, limit: int) -> np.ndarray:
-        """Global docids (descending, newest segment first)."""
-        out = []
+        """Global docids (descending, newest segment first).  The frozen
+        walk stops as soon as ``limit`` docids are collected — older
+        segments are never materialised past the cut."""
         plist, n = engine.docids_asc(self.active.state, term)
         ids = np.asarray(plist)[: int(n)][::-1].astype(np.int64) + self._doc_base
-        out.append(ids)
+        out = [ids]
+        total = ids.size
         for fz in reversed(self.frozen):
-            out.append(fz.docids_desc(term).astype(np.int64) + fz.doc_base)
-        return np.concatenate(out)[:limit] if out else np.zeros(0, np.int64)
+            if total >= limit:
+                break
+            ids = fz.docids_desc(term).astype(np.int64) + fz.doc_base
+            out.append(ids)
+            total += ids.size
+        return np.concatenate(out)[:limit]

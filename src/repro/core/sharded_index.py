@@ -147,6 +147,18 @@ def merge_desc(flat_desc):
     return jnp.where(key == INVALID, INVALID, INVALID - jnp.uint32(1) - key)
 
 
+def merge_desc_scored(flat_desc, flat_scores):
+    """:func:`merge_desc` with a parallel int32 score array carried
+    through the sort (one stable single-key ``lax.sort`` instead of the
+    key-only ``jnp.sort``): returns ``(ids, scores)`` with valid docids
+    descending at the front, INVALID / 0 padding at the back."""
+    x = flat_desc.astype(jnp.uint32)
+    key = jnp.where(x == INVALID, INVALID, INVALID - jnp.uint32(1) - x)
+    _, ids, scs = jax.lax.sort((key, x, flat_scores), num_keys=1,
+                               is_stable=True)
+    return ids, scs
+
+
 def topk_merge_desc(lists_desc, ns, k: Optional[int] = None):
     """Merge per-shard descending lists ``[S, W]`` (counts ``ns[S]``)
     into one descending list; optionally truncated to the newest ``k``.
@@ -285,6 +297,9 @@ class ShardedQueryEngine(NamedTuple):
     disjunctive: Callable       # (state, terms[Q, max_q], n_terms[Q])
     phrase: Callable            # (state, t1[Q], t2[Q])
     topk_conjunctive: Callable  # (state, terms, n_terms, k) -> ([Q, k], n)
+    conjunctive_scored: Callable  # (state, terms, n_terms) ->
+                                #   (desc, scores int32, n): quantized
+                                #   impact sums, lanes doc-aligned
     num_shards: int
     local: q.QueryEngine        # the per-shard single-device engine
 
@@ -342,8 +357,34 @@ def make_sharded_engine(layout: PoolLayout, mesh: Mesh,
         desc, n = conjunctive(state, terms, n_terms)
         return desc[:, :k], jnp.minimum(n, k)
 
+    def scored_body(state, terms, n_terms):
+        # scored fan-out: the score lanes travel with their docids
+        # through the flip, the all_gather and the stable merge sort, so
+        # lane i of (ids, scores) always refers to one document.
+        st = _squeeze0(state)
+        sid = _shard_index(mesh, axes)
+
+        def one(trow, nt):
+            asc, sc, n = local.conjunctive_scored_asc(st, trow, nt)
+            g = local_to_global(asc, sid, S)
+            return (q.asc_to_desc(g, n),
+                    q.flip_valid(sc, n, jnp.int32(0)), n)
+
+        desc, dsc, n = jax.vmap(one)(terms, n_terms)
+        gath = coll.all_gather(desc, DOCS_AXIS, axis=1, rules=rules)
+        gsc = coll.all_gather(dsc, DOCS_AXIS, axis=1, rules=rules)
+        n_tot = coll.psum(n, DOCS_AXIS, rules=rules)
+        ids, scs = jax.vmap(merge_desc_scored)(gath, gsc)
+        return ids, scs, n_tot
+
+    conjunctive_scored = jax.jit(shard_map(
+        scored_body, mesh=mesh,
+        in_specs=(sspec, P(), P()),
+        out_specs=(P(), P(), P()), check_rep=False))
+
     return ShardedQueryEngine(conjunctive, disjunctive, phrase,
-                              topk_conjunctive, S, local)
+                              topk_conjunctive, conjunctive_scored, S,
+                              local)
 
 
 # ---------------------------------------------------------------------------
@@ -420,6 +461,7 @@ class ShardedSegmentSet:
         self.n_rollovers = 0
         self.n_compactions = 0
         self._doc_base = 0
+        self._hist_freqs: Optional[np.ndarray] = None
         self.active = self._new_active()
         if docs_per_segment % self.active.num_shards:
             raise ValueError("docs_per_segment must be a multiple of the "
@@ -461,6 +503,10 @@ class ShardedSegmentSet:
         ]
         fz = ShardedFrozenSegment(shards, n_docs=seg.next_docid,
                                   doc_base=self._doc_base)
+        # H(t) snapshot: the freqs of THIS rollover, taken before any
+        # compaction can merge the segment into a multi-rollover tier
+        # (history_freqs must keep meaning "the last rollover").
+        self._hist_freqs = fz.term_freqs()
         self.frozen.append(fz)
         self.n_rollovers += 1
         if len(self.frozen) > self.max_segments - 1:
@@ -512,19 +558,29 @@ class ShardedSegmentSet:
             self.compact(plan[1], start=plan[0])
 
     def history_freqs(self) -> np.ndarray:
-        """H(t) from the most recent frozen segment (paper §7)."""
-        if not self.frozen:
+        """H(t) from the most recent ROLLOVER (paper §7) — a snapshot
+        taken at freeze time, so a compaction that merges the newest
+        frozen segment into a multi-rollover tier cannot silently widen
+        the signal's window."""
+        if self._hist_freqs is None:
             return np.zeros(self.vocab_size, np.int64)
-        return self.frozen[-1].term_freqs()
+        return self._hist_freqs.copy()
 
     def search_term_desc(self, term: int, engine: ShardedQueryEngine,
                          limit: int) -> np.ndarray:
-        """Global docids, descending (newest segment first)."""
+        """Global docids, descending (newest segment first).  The frozen
+        walk stops as soon as ``limit`` docids are collected — older
+        segments are never materialised past the cut."""
         terms = jnp.zeros((1, 8), jnp.uint32).at[0, 0].set(term)
         desc, n = engine.conjunctive(self.active.state, terms,
                                      jnp.ones((1,), jnp.int32))
         out = [np.asarray(desc[0])[: int(n[0])].astype(np.int64)
                + self._doc_base]
+        total = out[0].size
         for fz in reversed(self.frozen):
-            out.append(fz.docids_desc(term).astype(np.int64) + fz.doc_base)
+            if total >= limit:
+                break
+            ids = fz.docids_desc(term).astype(np.int64) + fz.doc_base
+            out.append(ids)
+            total += ids.size
         return np.concatenate(out)[:limit]

@@ -47,6 +47,13 @@ import numpy as np
 from repro.core import pointers as ptr_mod
 from repro.core.pointers import NULL, PoolLayout
 
+# Shared lru_cache bound for the jitted-function factories (ingest fns,
+# query engines, qexec active-path fns).  A long-lived process cycling
+# through distinct layouts/buckets evicts the oldest entry instead of
+# growing without bound; each entry only holds compiled functions, so
+# eviction costs a recompile, never correctness.
+FACTORY_CACHE_SIZE = 64
+
 
 class PoolState(NamedTuple):
     heap: jax.Array        # uint32[total_slots]
@@ -183,7 +190,7 @@ def _insert_one(layout: PoolLayout, tbl, caps, state: PoolState,
                      state.free_list, free_count)
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=FACTORY_CACHE_SIZE)
 def make_ingest_fn(layout: PoolLayout, vocab_size: int):
     """Build a jitted ``ingest(state, terms, postings, start_pools, valid)``.
 
@@ -246,7 +253,7 @@ def _progression_tables(layout: PoolLayout):
     return h, excl
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=FACTORY_CACHE_SIZE)
 def make_bulk_ingest_fn(layout: PoolLayout, vocab_size: int, *,
                         use_kernel: Optional[bool] = None,
                         interpret: Optional[bool] = None):

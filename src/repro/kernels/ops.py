@@ -27,6 +27,7 @@ from repro.kernels.paged_attention import PAGE
 from repro.kernels.paged_attention import paged_attention as _paged_attention
 from repro.kernels.postings_intersect import intersect_mask as _intersect_mask
 from repro.kernels.segment_intersect import (
+    scored_intersect_batched as _scored_intersect_batched,
     segment_intersect_mask as _segment_intersect_mask,
     segment_intersect_mask_batched as _segment_intersect_mask_batched)
 
@@ -90,6 +91,26 @@ def segment_intersect_mask_batched(a, b, *, use_kernel=None,
     return _segment_intersect_mask_batched(a, b, interpret=interpret)
 
 
+def scored_intersect_batched(a, b, rest, th, *, use_kernel=None,
+                             interpret=None, checked: bool = False):
+    """Row-wise scored conjunction over a (query, segment) batch of
+    ScoredStacks: impact sums for a-docids present in b, with whole
+    a-blocks zeroed when their block-max WAND bound ``a.bmax + rest``
+    cannot beat the heap threshold ``th`` (int32[N] each; th = -1
+    disables skipping).  ``use_kernel=None`` auto-routes like
+    :func:`segment_intersect_mask_batched`."""
+    if checked:
+        return sanitize.checked_call(
+            ref.scored_intersect_batched_ref, a, b, rest, th)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return ref.scored_intersect_batched_ref(a, b, rest, th)
+    if interpret is None:
+        interpret = _default_interpret()
+    return _scored_intersect_batched(a, b, rest, th, interpret=interpret)
+
+
 def bulk_append(heap, tail, freq, post_addr, post_val, ptr_addr, ptr_val,
                 term_idx, term_tail, term_freq, *, use_kernel=None,
                 interpret=None, checked: bool = False):
@@ -127,4 +148,4 @@ def bulk_append(heap, tail, freq, post_addr, post_val, ptr_addr, ptr_val,
 
 __all__ = ["paged_attention", "embedding_bag", "intersect_mask",
            "segment_intersect_mask", "segment_intersect_mask_batched",
-           "bulk_append", "ref", "PAGE"]
+           "scored_intersect_batched", "bulk_append", "ref", "PAGE"]

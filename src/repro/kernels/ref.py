@@ -98,3 +98,31 @@ def segment_intersect_mask_batched_ref(a_stacked, b_stacked):
         return jnp.zeros(a_ids.shape, jnp.int32)
     b_ids = decode_stacked(b_stacked)
     return jax.vmap(intersect_mask_ref)(a_ids, b_ids)
+
+
+def scored_intersect_batched_ref(a_scored, b_scored, rest, th):
+    """Oracle for the scored batched kernel: decode docids + impact
+    planes, membership via searchsorted (the first occurrence is the
+    real lane — pad lanes only repeat b's last docid with impact 0), sum
+    the two impacts, and zero every a-block whose WAND upper bound
+    ``a.bmax + rest`` cannot beat ``th``."""
+    from repro.kernels.segment_intersect import (SEG_BLOCK, decode_scores,
+                                                 decode_stacked)
+    a_ids = decode_stacked(a_scored.ids)        # [N, NBa * SEG_BLOCK]
+    if a_ids.shape[-1] == 0 or a_ids.shape[0] == 0:
+        return jnp.zeros(a_ids.shape, jnp.int32)
+    b_ids = decode_stacked(b_scored.ids)
+    a_sc = decode_scores(a_scored.swords)
+    b_sc = decode_scores(b_scored.swords)
+
+    def one(ar, br, asr, bsr, bmaxr, restr, thr):
+        pos = jnp.minimum(jnp.searchsorted(br, ar), br.shape[0] - 1)
+        hit = (br[pos] == ar) & (ar != jnp.uint32(0xFFFFFFFF))
+        bs = jnp.where(hit, bsr[pos], 0)
+        keep = jnp.repeat((bmaxr + restr) > thr, SEG_BLOCK)
+        return jnp.where(hit & keep & (bs > 0), asr + bs, 0)
+
+    return jax.vmap(one)(a_ids, b_ids, a_sc, b_sc,
+                         jnp.asarray(a_scored.bmax, jnp.int32),
+                         jnp.asarray(rest, jnp.int32),
+                         jnp.asarray(th, jnp.int32))

@@ -30,6 +30,8 @@ from repro.kernels.compat import pl, pltpu
 INVALID = 0xFFFFFFFF
 SEG_BLOCK = 128          # docids per compressed block
 SLAB_WORDS = SEG_BLOCK   # uint32 words DMA'd per block (bw=4 worst case)
+SCORE_MAX = 255          # 8-bit quantized impact ceiling (min(tf, 255))
+SCORE_WORDS = SEG_BLOCK // 4   # uint32 words per block's packed score plane
 
 class PackedList(NamedTuple):
     """One term's docid list, block-gap-compressed and device-ready.
@@ -507,3 +509,261 @@ def segment_intersect_mask_batched(a: StackedLists, b: StackedLists, *,
         return jnp.zeros((a.firsts.shape[0], a.n_blocks * SEG_BLOCK),
                          jnp.int32)
     return _call_batched(a, b, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Scored lists: per-posting quantized impacts + per-block max-score planes
+# ---------------------------------------------------------------------------
+class ScoredList(NamedTuple):
+    """A :class:`PackedList` plus its quantized impact plane.
+
+    ``swords`` packs one uint8 impact per docid lane, four lanes per
+    little-endian uint32 word, 32 words per 128-docid block — the same
+    lane order as the decoded docids, so lane i of ``decode_packed(ids)``
+    scores ``decode_scores(swords)[i]``.  Valid lanes carry impacts in
+    [1, SCORE_MAX]; pad lanes (including the repeated-last-docid tail of
+    the final real block) and pad blocks are zero, so 0 doubles as the
+    no-hit sentinel in the scored kernel.  ``bmax[b]`` is the max impact
+    in block b (0 for pad blocks) — the block-max WAND skip bound — and
+    ``smax`` is the static list-wide max (0 for an empty list), the
+    per-(term, segment) summary the segment-level skip uses.
+    """
+    ids: PackedList
+    swords: jax.Array   # uint32[n_blocks * SCORE_WORDS]
+    bmax: jax.Array     # int32[n_blocks]
+    smax: int           # static list-wide max impact
+
+
+def attach_scores(ids: PackedList, scores: np.ndarray) -> ScoredList:
+    """Attach an impact plane to an already-packed docid list (host-side,
+    runs at freeze time).  ``scores[i]`` belongs to the i-th valid docid
+    lane and must sit in [1, SCORE_MAX] — 0 is reserved for pad lanes."""
+    scores = np.asarray(scores)
+    if scores.shape != (ids.n,):
+        raise ValueError(f"scores shape {scores.shape} != ({ids.n},)")
+    if ids.n and (scores.min() < 1 or scores.max() > SCORE_MAX):
+        raise ValueError("impact scores must be in [1, SCORE_MAX]")
+    nb = ids.n_blocks
+    lanes = np.zeros(nb * SEG_BLOCK, np.uint8)
+    lanes[: ids.n] = scores
+    swords = np.ascontiguousarray(lanes).view("<u4")
+    bmax = (lanes.reshape(nb, SEG_BLOCK).max(axis=1).astype(np.int32)
+            if nb else np.zeros(0, np.int32))
+    smax = int(scores.max()) if ids.n else 0
+    return ScoredList(ids=ids, swords=jnp.asarray(swords),
+                      bmax=jnp.asarray(bmax), smax=smax)
+
+
+def pack_scored(ids: np.ndarray, scores: np.ndarray) -> ScoredList:
+    """Gap-compress ascending deduped docids and attach their impacts."""
+    return attach_scores(pack_docids(ids), scores)
+
+
+class ScoredStack(NamedTuple):
+    """A batch of :class:`ScoredList`s on shared pow2 shapes — the scored
+    counterpart of :class:`StackedLists` (a nested NamedTuple is a plain
+    pytree, so it vmaps/gathers exactly like the unscored stack).  Pad
+    rows/blocks carry all-zero score planes and zero ``bmax``."""
+    ids: StackedLists
+    swords: jax.Array   # uint32[..., NB * SCORE_WORDS]
+    bmax: jax.Array     # int32[..., NB]
+
+
+def stack_scored(scoreds, n_blocks: int = None,
+                 n_words: int = None) -> ScoredStack:
+    """Stack ScoredLists into one :class:`ScoredStack` (host-side numpy,
+    off the jitted query path) — see :func:`stack_packed`."""
+    ids = stack_packed([s.ids for s in scoreds], n_blocks, n_words)
+    G, nb = len(scoreds), ids.n_blocks
+    swords = np.zeros((G, nb * SCORE_WORDS), np.uint32)
+    bmax = np.zeros((G, nb), np.int32)
+    for g, s in enumerate(scoreds):
+        k = s.ids.n_blocks
+        if k:
+            swords[g, : k * SCORE_WORDS] = np.asarray(s.swords)
+            bmax[g, :k] = np.asarray(s.bmax)
+    return ScoredStack(ids=ids, swords=swords, bmax=bmax)
+
+
+def repad_scored(s: ScoredStack, n_blocks: int,
+                 n_words: int) -> ScoredStack:
+    """Grow a (numpy-leaved) scored stack to a wider shared bucket; new
+    pad blocks get zero score planes, preserving decode semantics."""
+    ids = repad_stacked(s.ids, n_blocks, n_words)
+    nb0 = s.ids.n_blocks
+    if nb0 == n_blocks:
+        return ScoredStack(ids=ids, swords=s.swords, bmax=s.bmax)
+    lead = s.bmax.shape[:-1]
+    pad_w = [(0, 0)] * len(lead) + [(0, (n_blocks - nb0) * SCORE_WORDS)]
+    pad_b = [(0, 0)] * len(lead) + [(0, n_blocks - nb0)]
+    return ScoredStack(ids=ids, swords=np.pad(s.swords, pad_w),
+                       bmax=np.pad(s.bmax, pad_b))
+
+
+def decode_scores(swords: jax.Array) -> jax.Array:
+    """Unpack uint8 impact lanes from uint32 score words: int32[..., 4*W]
+    over arbitrary leading dims.  Same static byte-plane unpack as the
+    gap decoder, fixed at one byte per lane."""
+    lead = swords.shape[:-1]
+    w = swords.shape[-1]
+    sh = _plane_shifts(lead + (w, 4), 8)
+    vals = (swords[..., None] >> sh) & jnp.uint32(0xFF)
+    return vals.reshape(lead + (w * 4,)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Scored batched kernel: fused decode + intersect + impact sum + block-max
+# skip, one grid step per (query, segment) pair
+# ---------------------------------------------------------------------------
+def _scored_kernel_batched(a_firsts, a_bws, a_woffs, b_firsts, b_bws,
+                           b_woffs, n_valid, a_bmax, rest, th,
+                           a_hbm, b_hbm, as_hbm, bs_hbm, o_hbm,
+                           a_slab, b_slab, as_slab, bs_slab, m_buf,
+                           sem_a, sem_b, sem_as, sem_bs, sem_o, *,
+                           na_blocks: int, nb_blocks: int):
+    """Scored variant of :func:`_kernel_batched`.  Row r walks the same
+    two-pointer block pairing, but each eq-match contributes b's impact
+    (unique docids mean at most one real match per a-lane, and b's pad
+    lanes score 0, so a lane-wise max recovers the matched impact).  At
+    flush time a-blocks whose WAND upper bound ``a_bmax + rest`` cannot
+    beat the heap threshold ``th`` are zeroed whole — the output lane
+    value is ``a_impact + b_impact`` for surviving conjunctive hits and
+    0 otherwise."""
+    r = pl.program_id(0)
+
+    def copy_a(ia):
+        return pltpu.make_async_copy(
+            a_hbm.at[r, pl.ds(a_woffs[r, ia], SLAB_WORDS)], a_slab, sem_a)
+
+    def copy_b(ib):
+        return pltpu.make_async_copy(
+            b_hbm.at[r, pl.ds(b_woffs[r, ib], SLAB_WORDS)], b_slab, sem_b)
+
+    def copy_as(ia):
+        return pltpu.make_async_copy(
+            as_hbm.at[r, pl.ds(ia * SCORE_WORDS, SCORE_WORDS)], as_slab,
+            sem_as)
+
+    def copy_bs(ib):
+        return pltpu.make_async_copy(
+            bs_hbm.at[r, pl.ds(ib * SCORE_WORDS, SCORE_WORDS)], bs_slab,
+            sem_bs)
+
+    def flush(ia):
+        cp = pltpu.make_async_copy(
+            m_buf, o_hbm.at[r, pl.ds(ia * SEG_BLOCK, SEG_BLOCK)], sem_o)
+        cp.start()
+        cp.wait()
+
+    for cp in (copy_a(0), copy_b(0), copy_as(0), copy_bs(0)):
+        cp.start()
+        cp.wait()
+    m_buf[...] = jnp.zeros((SEG_BLOCK,), jnp.int32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (SEG_BLOCK, 1), 0)
+    lane = lane.reshape(SEG_BLOCK)
+
+    def step(_, carry):
+        ia, ib = carry
+        live = ia < na_blocks
+        iam = jnp.minimum(ia, na_blocks - 1)
+        ibm = jnp.minimum(ib, nb_blocks - 1)
+        a_ids = a_firsts[r, iam] + jnp.cumsum(
+            _unpack_gaps(a_slab[...], a_bws[r, iam]), dtype=jnp.uint32)
+        b_ids = b_firsts[r, ibm] + jnp.cumsum(
+            _unpack_gaps(b_slab[...], b_bws[r, ibm]), dtype=jnp.uint32)
+        b_sc = decode_scores(bs_slab[...])
+        valid = (iam * SEG_BLOCK + lane) < n_valid[r]
+        eq = (a_ids[:, None] == b_ids[None, :]) & valid[:, None]
+        matched = jnp.max(eq.astype(jnp.int32) * b_sc[None, :], axis=1)
+        m_buf[...] = jnp.where(live, jnp.maximum(m_buf[...], matched),
+                               m_buf[...])
+        a_max = a_ids[SEG_BLOCK - 1]
+        b_max = b_ids[SEG_BLOCK - 1]
+        b_done = ib >= nb_blocks - 1
+        adv_a = live & ((a_max <= b_max) | b_done)
+        adv_b = live & ((b_max <= a_max) & ~b_done)
+
+        @pl.when(adv_a)
+        def _():
+            a_sc = decode_scores(as_slab[...])
+            keep = (a_bmax[r, iam] + rest[r]) > th[r]
+            hit = m_buf[...] > 0
+            m_buf[...] = jnp.where(keep & hit & valid,
+                                   a_sc + m_buf[...], 0)
+            flush(iam)
+            m_buf[...] = jnp.zeros((SEG_BLOCK,), jnp.int32)
+
+        ia2 = ia + adv_a.astype(jnp.int32)
+        ib2 = ib + adv_b.astype(jnp.int32)
+
+        @pl.when(adv_a & (ia2 < na_blocks))
+        def _():
+            for cp in (copy_a(ia2), copy_as(ia2)):
+                cp.start()
+                cp.wait()
+
+        @pl.when(adv_b)
+        def _():
+            for cp in (copy_b(ib2), copy_bs(ib2)):
+                cp.start()
+                cp.wait()
+
+        return ia2, ib2
+
+    jax.lax.fori_loop(0, na_blocks + nb_blocks, step, (0, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _scored_call_batched(a: ScoredStack, b: ScoredStack, rest, th, *,
+                         interpret: bool = True):
+    N, na_blocks = a.ids.firsts.shape
+    nb_blocks = b.ids.firsts.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=10,
+        grid=(N,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)] * 4,
+        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((SLAB_WORDS,), jnp.uint32),
+            pltpu.VMEM((SLAB_WORDS,), jnp.uint32),
+            pltpu.VMEM((SCORE_WORDS,), jnp.uint32),
+            pltpu.VMEM((SCORE_WORDS,), jnp.uint32),
+            pltpu.VMEM((SEG_BLOCK,), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_scored_kernel_batched, na_blocks=na_blocks,
+                          nb_blocks=nb_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, na_blocks * SEG_BLOCK),
+                                       jnp.int32),
+        interpret=interpret,
+    )(a.ids.firsts, a.ids.bws, a.ids.woffs,
+      b.ids.firsts, b.ids.bws, b.ids.woffs,
+      jnp.asarray(a.ids.ns, jnp.int32), jnp.asarray(a.bmax, jnp.int32),
+      jnp.asarray(rest, jnp.int32), jnp.asarray(th, jnp.int32),
+      a.ids.payload, b.ids.payload, a.swords, b.swords)
+
+
+def scored_intersect_batched(a: ScoredStack, b: ScoredStack, rest, th, *,
+                             interpret: bool = True) -> jax.Array:
+    """Row-wise scored conjunction of a's docids with b over a stacked
+    batch: int32[N, a.n_blocks * SEG_BLOCK] where lane i holds
+    ``a_impact + b_impact`` if a's docid i also occurs in b AND its
+    block's WAND bound ``a.bmax + rest`` beats ``th``, else 0.
+
+    ``rest``/``th`` are int32[N]: the summed max impacts of the other
+    live query terms in this segment, and the current top-k heap
+    threshold (-1 disables skipping — every bound is > -1).
+    """
+    assert a.ids.firsts.ndim == 2 and b.ids.firsts.ndim == 2, \
+        "stack leaves must be [N, ...]; reshape the (Q, G) batch first"
+    if a.ids.n_blocks == 0 or a.ids.firsts.shape[0] == 0:
+        return jnp.zeros((a.ids.firsts.shape[0],
+                          a.ids.n_blocks * SEG_BLOCK), jnp.int32)
+    return _scored_call_batched(a, b, rest, th, interpret=interpret)

@@ -8,30 +8,36 @@ import pytest
 from benchmarks import check_regression as cr
 
 
-def _report(ingest=None, query=None, ok=True):
+def _report(ingest=None, query=None, scored=None, ok=True):
     suites = {}
     if ingest is not None:
         suites["ingest"] = {"ok": ok, "metrics": ingest}
     if query is not None:
         suites["query"] = {"ok": ok, "metrics": query}
+    if scored is not None:
+        suites["scored"] = {"ok": ok, "metrics": scored}
     return {"suites": suites}
 
 
 BASE = _report(
     ingest={"bulk_docs_s": 1000.0, "bulk_vs_scan_speedup": 10.0},
-    query={"batched_ms_per_q_q128": 2.0})
+    query={"batched_ms_per_q_q128": 2.0},
+    scored={"topk_ms_per_q_q128": 4.0, "block_skip_rate": 0.20})
 
 
 def test_regression_detected_over_threshold():
-    """A 40% docs/s drop (higher-is-better) and a 40% latency rise
-    (lower-is-better) both fail at the default 30% threshold."""
+    """A 40% docs/s drop (higher-is-better), a 40% latency rise
+    (lower-is-better), and a 50% block-skip-rate collapse all fail at
+    the default 30% threshold."""
     cur = _report(
         ingest={"bulk_docs_s": 600.0, "bulk_vs_scan_speedup": 10.0},
-        query={"batched_ms_per_q_q128": 2.8})
+        query={"batched_ms_per_q_q128": 2.8},
+        scored={"topk_ms_per_q_q128": 4.0, "block_skip_rate": 0.10})
     failures, lines = cr.compare(cur, BASE, threshold=0.30)
     assert failures == ["ingest.bulk_docs_s",
-                        "query.batched_ms_per_q_q128"]
-    assert sum("FAIL" in ln for ln in lines) == 2
+                        "query.batched_ms_per_q_q128",
+                        "scored.block_skip_rate"]
+    assert sum("FAIL" in ln for ln in lines) == 3
 
 
 def test_pass_within_threshold_and_improvements():
@@ -39,7 +45,8 @@ def test_pass_within_threshold_and_improvements():
     when huge (a 10x latency drop is not a 'change' regression)."""
     cur = _report(
         ingest={"bulk_docs_s": 800.0, "bulk_vs_scan_speedup": 30.0},
-        query={"batched_ms_per_q_q128": 0.2})
+        query={"batched_ms_per_q_q128": 0.2},
+        scored={"topk_ms_per_q_q128": 0.4, "block_skip_rate": 0.90})
     failures, lines = cr.compare(cur, BASE, threshold=0.30)
     assert failures == []
     assert all("FAIL" not in ln for ln in lines)
@@ -49,10 +56,10 @@ def test_missing_metric_skips_not_fails():
     """Either side lacking a guarded metric (suite missing, suite not
     ok, or key absent) is a skip — the guard must never block
     adding/removing suites."""
-    cur = _report(ingest={"bulk_docs_s": 1.0})   # no speedup, no query
+    cur = _report(ingest={"bulk_docs_s": 1.0})   # no speedup/query/scored
     failures, lines = cr.compare(cur, BASE, threshold=0.30)
     assert "ingest.bulk_docs_s" in failures      # real regression kept
-    assert sum("skip" in ln for ln in lines) == 2
+    assert sum("skip" in ln for ln in lines) == 4
     # a failed suite's metrics don't count either
     bad = {"suites": {"ingest": {"ok": False,
                                  "metrics": {"bulk_docs_s": 9e9}}}}

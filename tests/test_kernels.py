@@ -303,3 +303,102 @@ def test_ops_batched_auto_routes_to_ref_on_cpu():
     want = np.asarray(ref.segment_intersect_mask_batched_ref(
         _to_jnp(a), _to_jnp(b)))
     np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# scored segment intersect: the block-max WAND substrate
+# ---------------------------------------------------------------------------
+from repro.kernels.segment_intersect import (SCORE_MAX, pack_scored,
+                                             repad_scored, stack_scored,
+                                             scored_intersect_batched)
+
+
+def _rand_scored(n, hi):
+    ids = _rand_asc(n, hi)
+    scores = RNG.integers(1, SCORE_MAX + 1, n).astype(np.int32)
+    return ids, scores
+
+
+@pytest.mark.parametrize("rows", [
+    [(100, 80), (0, 50), (513, 999), (128, 128), (1, 1)],
+    [(300, 300), (50, 1000)],
+])
+def test_scored_intersect_batched(rows):
+    """Scored grid kernel == jnp oracle row for row, and with skipping
+    disabled (th = -1) every valid a-lane carries a_score + b_score iff
+    the docid is in b — the numpy ground truth."""
+    a_raw = [_rand_scored(na, 1 << 16) for na, _ in rows]
+    b_raw = [_rand_scored(nb, 1 << 16) for _, nb in rows]
+    A = stack_scored([pack_scored(i, s) for i, s in a_raw])
+    B = stack_scored([pack_scored(i, s) for i, s in b_raw])
+    N = len(rows)
+    rest = jnp.zeros(N, jnp.int32)
+    th = jnp.full(N, -1, jnp.int32)
+    got = np.asarray(ops.scored_intersect_batched(
+        _to_jnp(A), _to_jnp(B), rest, th, use_kernel=True,
+        interpret=True, checked=CHECKED))
+    want = np.asarray(ref.scored_intersect_batched_ref(
+        _to_jnp(A), _to_jnp(B), rest, th))
+    np.testing.assert_array_equal(got, want)
+    for g, ((ai, asc), (bi, bsc)) in enumerate(zip(a_raw, b_raw)):
+        pos = np.minimum(np.searchsorted(bi, ai), max(bi.size - 1, 0))
+        hit = bi[pos] == ai if bi.size else np.zeros(ai.size, bool)
+        exp = np.where(hit, asc + (bsc[pos] if bi.size else 0), 0)
+        np.testing.assert_array_equal(got[g, : ai.size], exp)
+
+
+def test_scored_intersect_blockmax_skip_matches_oracle():
+    """With a live threshold the kernel zeroes exactly the blocks whose
+    bmax + rest cannot beat th — same bits as the oracle, and a direct
+    numpy check that surviving blocks are exactly the qualifying ones."""
+    ids = np.arange(0, 4 * SEG_BLOCK, dtype=np.uint32)
+    scores = np.ones(ids.size, np.int32)
+    scores[SEG_BLOCK: 2 * SEG_BLOCK] = 50      # one hot block
+    A = stack_scored([pack_scored(ids, scores)])
+    B = stack_scored([pack_scored(ids, np.ones(ids.size, np.int32))])
+    A, B = _to_jnp(A), _to_jnp(B)
+    rest = jnp.zeros(1, jnp.int32)
+    for th_v in (-1, 1, 5, 50, 300):
+        th = jnp.full(1, th_v, jnp.int32)
+        got = np.asarray(ops.scored_intersect_batched(
+            A, B, rest, th, use_kernel=True, interpret=True,
+            checked=CHECKED))
+        want = np.asarray(ref.scored_intersect_batched_ref(A, B, rest,
+                                                           th))
+        np.testing.assert_array_equal(got, want)
+        bmax = np.asarray(A.bmax[0])
+        for blk in range(4):
+            lanes = got[0, blk * SEG_BLOCK: (blk + 1) * SEG_BLOCK]
+            if bmax[blk] + 0 > th_v:           # skip bound: bmax + rest
+                assert np.all(lanes == scores[blk * SEG_BLOCK] + 1)
+            else:
+                assert np.all(lanes == 0)
+
+
+def test_scored_repad_preserves_planes():
+    ids, sc = _rand_scored(300, 1 << 20)
+    st = stack_scored([pack_scored(ids, sc)])
+    st2 = repad_scored(st, st.ids.n_blocks * 2, st.ids.n_words * 2)
+    rest = jnp.zeros(1, jnp.int32)
+    th = jnp.full(1, -1, jnp.int32)
+    got = np.asarray(ref.scored_intersect_batched_ref(
+        _to_jnp(st), _to_jnp(st), rest, th))
+    got2 = np.asarray(ref.scored_intersect_batched_ref(
+        _to_jnp(st2), _to_jnp(st2), rest, th))
+    np.testing.assert_array_equal(got2[:, : got.shape[1]], got)
+    assert np.all(got2[:, got.shape[1]:] == 0)
+
+
+def test_ops_scored_auto_routes_to_ref_on_cpu():
+    ai, asc = _rand_scored(90, 1000)
+    bi, bsc = _rand_scored(70, 1000)
+    A = stack_scored([pack_scored(ai, asc)])
+    B = stack_scored([pack_scored(bi, bsc)])
+    rest = jnp.zeros(1, jnp.int32)
+    th = jnp.zeros(1, jnp.int32)
+    got = np.asarray(ops.scored_intersect_batched(
+        _to_jnp(A), _to_jnp(B), rest, th,   # use_kernel=None -> oracle
+        checked=CHECKED))
+    want = np.asarray(ref.scored_intersect_batched_ref(
+        _to_jnp(A), _to_jnp(B), rest, th))
+    np.testing.assert_array_equal(got, want)

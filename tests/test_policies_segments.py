@@ -172,3 +172,60 @@ def test_compression_shrinks_dense_lists():
     _, packed = segments.compress_segment(fz)
     raw = fz.data.nbytes
     assert packed < raw, (packed, raw)
+
+
+def test_history_freqs_invariant_under_compaction():
+    """Regression: H(t) is a freeze-time snapshot of the MOST RECENT
+    rollover.  Compacting older segments (which merges rollovers into
+    multi-segment tiers) must not change it."""
+    spec = synth.CorpusSpec(vocab=400, n_docs=300, seed=5)
+    docs = synth.zipf_corpus(spec)
+    layout = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 512, 64))
+    ss = segments.SegmentSet(layout, spec.vocab, docs_per_segment=100)
+    for i in range(3):
+        ss.ingest(jnp.asarray(docs[i * 100:(i + 1) * 100]))
+    assert len(ss.frozen) == 3
+    want = synth.term_freqs(docs[200:300], spec.vocab)  # last rollover
+    before = ss.history_freqs()
+    assert np.array_equal(before, want)
+    assert ss.compact(3) is not None
+    assert len(ss.frozen) == 1
+    assert np.array_equal(ss.history_freqs(), before)
+
+
+def test_search_term_desc_early_stops_old_segments():
+    """Regression: the frozen walk materialised EVERY segment before
+    slicing to ``limit``.  Once the newer segments fill the limit,
+    older ones must never be touched — and results stay identical to
+    the full walk's ``[:limit]``."""
+    spec = synth.CorpusSpec(vocab=300, n_docs=500, seed=6)
+    docs = synth.zipf_corpus(spec)
+    layout = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 512, 64))
+    ss = segments.SegmentSet(layout, spec.vocab, docs_per_segment=100)
+    for i in range(5):
+        ss.ingest(jnp.asarray(docs[i * 100:(i + 1) * 100]))
+    assert len(ss.frozen) == 5 and ss.active.next_docid == 0
+    freqs = synth.term_freqs(docs, spec.vocab)
+    t = int(np.argmax(freqs))
+    eng = make_engine(layout, max_slices_for(Z, freqs), 1024)
+    full = ss.search_term_desc(t, eng, limit=10_000)
+    exp = np.nonzero((docs == t).any(axis=1))[0][::-1]
+    assert np.array_equal(full, exp)
+
+    touched = []
+    orig = segments.FrozenSegment.docids_desc
+
+    def counting(self, term):
+        touched.append(self)
+        return orig(self, term)
+
+    segments.FrozenSegment.docids_desc = counting
+    try:
+        # the newest frozen segment alone holds >= limit hits
+        newest_n = int(ss.frozen[-1].docid_bounds(t)[0])
+        assert newest_n >= 3
+        got = ss.search_term_desc(t, eng, limit=3)
+    finally:
+        segments.FrozenSegment.docids_desc = orig
+    assert np.array_equal(got, full[:3])
+    assert len(touched) == 1 and touched[0] is ss.frozen[-1]

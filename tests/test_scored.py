@@ -1,0 +1,275 @@
+"""Scored retrieval equivalence: block-max WAND top-k
+(``scored_topk``) must be BIT-IDENTICAL to the full-sort oracle
+(``_scored_unified``: exhaustive evaluation + stable
+(score desc, docid desc) sort) for every k — including k = 0, k = 1,
+k > |result|, k past the top-k routing cap — with tied scores resolved
+newest-first, through >= 2 rollovers and a compaction, single-device
+and 4-shard.  Plus the score-plane invariants and the factory-cache
+bounds that ride along in this layer."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.analysis import invariants
+from repro.core import analytical, qexec, query, slicepool
+from repro.core import lifecycle as lc
+from repro.core.lifecycle import LifecycleEngine
+from repro.core.pointers import PoolLayout
+from repro.data import synth
+
+Z = (1, 4, 7, 11)
+LAYOUT = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 512, 64))
+
+
+def _build(seed, vocab=500, n_docs=460, docs_per_segment=180, **kw):
+    """Drive a fresh lifecycle engine through >= 2 rollovers."""
+    spec = synth.CorpusSpec(vocab=vocab, n_docs=n_docs, seed=seed)
+    docs = synth.zipf_corpus(spec)
+    freqs = synth.term_freqs(docs, vocab)
+    fmax = int(freqs.max())
+    max_slices = int(analytical.slices_needed(Z, fmax)) + 1
+    max_len = 1 << (fmax - 1).bit_length()
+    eng = LifecycleEngine(LAYOUT, vocab, docs_per_segment,
+                          max_slices=max_slices, max_len=max_len,
+                          use_kernel=False, **kw)
+    for i in range(0, n_docs, 20):
+        eng.ingest(docs[i: i + 20])
+    assert eng.stats.rollovers >= 2
+    return eng, freqs
+
+
+@pytest.fixture(scope="module", params=[11, 29])
+def engine(request):
+    return _build(request.param)
+
+
+def _oracle(eng, terms, k):
+    """Full-sort scored result with the SAME engine object."""
+    eng.batched = False
+    try:
+        return eng._scored_unified(terms, k)
+    finally:
+        eng.batched = True
+
+
+def _assert_same(got, exp, ctx):
+    gi, gs = got
+    ei, es = exp
+    assert np.array_equal(gi, ei), (ctx, gi[:8], ei[:8])
+    assert np.array_equal(gs, es), (ctx, gs[:8], es[:8])
+
+
+terms_strategy = st.lists(st.integers(0, 499), min_size=1, max_size=4)
+
+
+@given(st.lists(terms_strategy, min_size=1, max_size=5),
+       st.sampled_from([1, 2, 3, 7, 10, 50, 1000]))
+@settings(max_examples=40, deadline=None)
+def test_scored_topk_matches_full_sort_oracle(engine, queries, k):
+    eng, freqs = engine
+    # bias half the draws toward hot terms so intersections are nonempty
+    top = np.argsort(-freqs)
+    queries = [[int(top[t % 64]) if i % 2 else t for i, t in enumerate(q)]
+               for q in queries]
+    got = eng.scored_topk_batch(queries, k)
+    for terms, g in zip(queries, got):
+        _assert_same(g, _oracle(eng, terms, k), (terms, k))
+
+
+def test_scored_k_edge_cases(engine):
+    eng, freqs = engine
+    top = np.argsort(-freqs)
+    terms = [int(top[0]), int(top[2])]
+    full_i, full_s = eng.scored_full(terms)
+    assert full_i.size > 0
+    # k = 0 -> empty; k > |result| -> everything; k past the top-k
+    # routing cap -> full-evaluation fallback, still identical.
+    for k in (0, 1, full_i.size, full_i.size + 5,
+              lc._TOPK_LIMIT_MAX + 1):
+        _assert_same(eng.scored_topk(terms, k),
+                     (full_i[:k], full_s[:k]), k)
+    # full evaluation == oracle too (the merge path, not just top-k)
+    _assert_same((full_i, full_s), _oracle(eng, terms, None), "full")
+
+
+def test_scored_full_batch_matches_oracle(engine):
+    eng, freqs = engine
+    top = np.argsort(-freqs)
+    queries = [[int(top[0])], [int(top[1]), int(top[4])],
+               [int(top[3]), 499]]
+    for terms, g in zip(queries, eng.scored_full_batch(queries)):
+        _assert_same(g, _oracle(eng, terms, None), terms)
+
+
+def test_scored_ties_resolve_newest_first():
+    """Identical documents tie on score; ranking must fall back to
+    docid descending (reverse-chronological), not arrival order of the
+    sort's equal keys."""
+    docs = np.tile(np.array([[3, 5, 3, 5]], np.int64), (90, 1))
+    eng = LifecycleEngine(LAYOUT, 8, 40, max_slices=64, max_len=256,
+                          use_kernel=False)
+    for i in range(0, 90, 10):
+        eng.ingest(docs[i: i + 10])
+    assert eng.stats.rollovers == 2
+    ids, scs = eng.scored_topk([3, 5], 10)
+    assert np.array_equal(ids, np.arange(89, 79, -1))
+    assert np.all(scs == scs[0])          # all tied
+    _assert_same((ids, scs), _oracle(eng, [3, 5], 10), "ties")
+
+
+def test_scored_survives_compaction(engine):
+    """Compaction re-tiles the frozen segments; score planes are
+    rebuilt on the merged CSR, so scored results must not move."""
+    eng, freqs = _build(37)
+    top = np.argsort(-freqs)
+    queries = [[int(top[0]), int(top[1])], [int(top[2])],
+               [int(top[1]), int(top[5]), int(top[9])]]
+    before = eng.scored_topk_batch(queries, 9)
+    assert eng.compact(2) is not None
+    after = eng.scored_topk_batch(queries, 9)
+    for terms, b, a in zip(queries, before, after):
+        _assert_same(a, b, terms)
+        _assert_same(a, _oracle(eng, terms, 9), terms)
+
+
+def test_scored_block_skips_accumulate(engine):
+    eng, freqs = engine
+    top = np.argsort(-freqs)
+    eng.stats.scored_blocks_skipped = 0
+    eng.stats.scored_blocks_live = 0
+    eng.scored_topk_batch([[int(top[0])], [int(top[0]), int(top[1])]], 3)
+    assert eng.stats.scored_blocks_live > 0
+    assert 0 <= eng.stats.scored_blocks_skipped \
+        <= eng.stats.scored_blocks_live
+
+
+def test_score_planes_validate(engine):
+    """Every frozen segment's impact planes quantize the CSR tf exactly
+    and the gathered stack satisfies the block-max invariants."""
+    eng, freqs = engine
+    top = np.argsort(-freqs)
+    terms = [int(top[0]), int(top[7])]
+    for pseg in eng.frozen_packed:
+        invariants.check_frozen_segment(
+            pseg.seg, layout=LAYOUT,
+            scored=[(t, pseg.scored(t)) for t in terms]
+        ).raise_if_failed()
+    stack = eng._frozen_stack()
+    tmat, n_terms = qexec.pad_query_batch([terms], eng.max_query_len)
+    sc, lasts, smax = stack.gather_scored(tmat[:, :2], n_terms)
+    rep = invariants.check_stacked_lists(sc)
+    rep.raise_if_failed()
+    assert rep.stats["scored_rows"] > 0
+    # the per-(term, segment) summary bounds every block max
+    bm = np.asarray(sc.bmax)              # [Q, T, G, NB]
+    assert np.all(np.asarray(smax)[..., None] >= bm)
+
+
+def test_factory_caches_bounded_and_reused():
+    """Regression: the jit-function factories were unbounded
+    ``lru_cache(maxsize=None)`` — a layout/shape churn leak.  All are
+    bounded now, and rollovers (fresh states, same shapes) must HIT the
+    cache, not repopulate it."""
+    for fac in (qexec.make_active_fn, qexec.make_active_topk_fn,
+                qexec.make_active_scored_fn, query.make_engine,
+                slicepool.make_ingest_fn, slicepool.make_bulk_ingest_fn):
+        info = fac.cache_info()
+        assert info.maxsize == slicepool.FACTORY_CACHE_SIZE, fac
+    eng, freqs = _build(53, n_docs=400)
+    top = np.argsort(-freqs)
+    base = qexec.make_active_scored_fn.cache_info()
+    eng.scored_topk([int(top[0])], 3)
+    eng.ingest(np.tile(np.array([[1, 2, 3, 4]], np.int64), (20, 1)))
+    eng.scored_topk([int(top[0])], 3)     # post-rollover: same shapes
+    info = qexec.make_active_scored_fn.cache_info()
+    assert info.hits > base.hits
+    assert info.misses <= base.misses + 1
+
+
+SCRIPT_SHARDED = textwrap.dedent("""
+    from repro.dist import collectives as C
+    C.force_host_device_count(4)
+    import json
+    import numpy as np
+
+    from repro.core import analytical
+    from repro.core.lifecycle import (LifecycleEngine,
+                                      ShardedLifecycleEngine)
+    from repro.core.pointers import PoolLayout
+    from repro.core.sharded_index import make_doc_mesh
+    from repro.data import synth
+
+    Z = (1, 4, 7, 11)
+    layout = PoolLayout(z=Z, slices_per_pool=(4096, 2048, 512, 64))
+    spec = synth.CorpusSpec(vocab=400, n_docs=360, seed=17)
+    docs = synth.zipf_corpus(spec)
+    freqs = synth.term_freqs(docs, spec.vocab)
+    fmax = int(freqs.max())
+    max_slices = int(analytical.slices_needed(Z, fmax)) + 1
+    max_len = 1 << (fmax - 1).bit_length()
+    mesh, rules = make_doc_mesh(4)
+
+    single = LifecycleEngine(layout, spec.vocab, 120,
+                             max_slices=max_slices, max_len=max_len,
+                             use_kernel=False)
+    shard = ShardedLifecycleEngine(layout, spec.vocab, 120, mesh,
+                                   max_slices=max_slices,
+                                   max_len=max_len, rules=rules,
+                                   use_kernel=False)
+    for i in range(0, 360, 40):
+        single.ingest(docs[i:i + 40])
+        shard.ingest(docs[i:i + 40])
+    assert single.stats.rollovers >= 2 and shard.stats.rollovers >= 2
+
+    top = np.argsort(-freqs)
+    queries = [[int(top[0]), int(top[1])], [int(top[2]), int(top[5])],
+               [int(top[9])], [int(top[1]), int(top[3]), int(top[7])],
+               [int(top[0]), 399]]
+    n_checked = 0
+    for k in (1, 5, 16, 9999):
+        got = shard.scored_topk_batch(queries, k)
+        for terms, (gi, gs) in zip(queries, got):
+            shard.batched = False
+            ei, es = shard._scored_unified(terms, k)
+            shard.batched = True
+            si, ss = single.scored_topk(terms, k)
+            assert np.array_equal(gi, ei) and np.array_equal(gs, es)
+            assert np.array_equal(gi, si) and np.array_equal(gs, ss)
+            n_checked += 1
+    for terms, (gi, gs) in zip(queries, shard.scored_full_batch(queries)):
+        si, ss = single.scored_full(terms)
+        assert np.array_equal(gi, si) and np.array_equal(gs, ss)
+        n_checked += 1
+    shard.compact(2)
+    single.compact(2)
+    for terms, (gi, gs) in zip(queries,
+                               shard.scored_topk_batch(queries, 7)):
+        si, ss = single.scored_topk(terms, 7)
+        assert np.array_equal(gi, si) and np.array_equal(gs, ss)
+        n_checked += 1
+    print(json.dumps({"n_checked": n_checked}))
+""")
+
+
+def _run_subprocess(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_scored_matches_sequential_and_single_device():
+    res = _run_subprocess(SCRIPT_SHARDED)
+    assert res["n_checked"] == 30
