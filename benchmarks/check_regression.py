@@ -7,19 +7,34 @@ hot-path going through a slow fallback).
     PYTHONPATH=src python -m benchmarks.check_regression BENCH_ci.json \
         [--baseline-dir .] [--threshold 0.30]
 
-Guarded metrics (skipped with a note when either side lacks one, so the
-guard never blocks adding/removing suites):
+Guarded metrics:
 
   * bulk-ingest docs/s        (ingest.bulk_docs_s, higher is better)
   * bulk-vs-scan speedup      (ingest.bulk_vs_scan_speedup, higher)
   * batched query latency     (query.batched_ms_per_q_q128, lower;
     the qps metric is its reciprocal, so one guard covers both)
+  * scored top-k latency      (scored.topk_ms_per_q_q128, lower)
+  * block-max skip rate       (scored.block_skip_rate, higher)
+  * journal replay docs/s     (recovery.replay_docs_per_s, higher)
+
+Skip/fail semantics are asymmetric by side:
+
+  * BASELINE lacking a metric (suite missing, not ok, key absent, or
+    zero) is a SKIP with a note — the guard must never block ADDING a
+    suite (the first run carrying ``recovery`` has no baseline number).
+  * CANDIDATE lacking a metric the baseline has, or carrying a
+    non-finite value (NaN/inf — a broken timer or a 0/0), is a NAMED
+    one-line FAILURE and exit 1 — that's a regression in the
+    measurement itself, not a missing feature.
+  * A missing or unparsable candidate file is a named one-line error
+    and exit 1, never a traceback.
 """
 from __future__ import annotations
 
 import argparse
 import glob
 import json
+import math
 import os
 import re
 import sys
@@ -34,6 +49,7 @@ GUARDS = (
     ("query", "batched_ms_per_q_q128", "lower"),
     ("scored", "topk_ms_per_q_q128", "lower"),
     ("scored", "block_skip_rate", "higher"),
+    ("recovery", "replay_docs_per_s", "higher"),
 )
 
 
@@ -61,9 +77,19 @@ def compare(current: dict, baseline: dict, threshold: float):
         cur = metric(current, suite, key)
         base = metric(baseline, suite, key)
         name = f"{suite}.{key}"
-        if cur is None or base is None or base == 0:
-            lines.append(f"  skip {name}: missing on "
-                         f"{'current' if cur is None else 'baseline'} side")
+        if base is None or base == 0 or not math.isfinite(base):
+            lines.append(f"  skip {name}: missing on baseline side")
+            continue
+        if cur is None:
+            lines.append(f"  FAIL {name}: baseline has {base:.3f} but "
+                         f"the candidate lacks the metric (suite failed "
+                         f"or key dropped)")
+            failures.append(name)
+            continue
+        if not math.isfinite(cur):
+            lines.append(f"  FAIL {name}: candidate value {cur!r} is "
+                         f"not finite")
+            failures.append(name)
             continue
         change = (cur - base) / base
         regress = -change if direction == "higher" else change
@@ -73,6 +99,25 @@ def compare(current: dict, baseline: dict, threshold: float):
         if regress > threshold:
             failures.append(name)
     return failures, lines
+
+
+def _load(path: str, role: str) -> dict:
+    """Parse one report JSON; a missing/broken file is a one-line named
+    error and exit 1 (the guard's own infrastructure failing must not
+    look like a crash in CI logs)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as exc:
+        print(f"ERROR: cannot read {role} report {path}: {exc}")
+        sys.exit(1)
+    except ValueError as exc:
+        print(f"ERROR: {role} report {path} is not valid JSON: {exc}")
+        sys.exit(1)
+    if not isinstance(doc, dict):
+        print(f"ERROR: {role} report {path} is not a JSON object")
+        sys.exit(1)
+    return doc
 
 
 def main(argv=None) -> None:
@@ -89,10 +134,8 @@ def main(argv=None) -> None:
         print(f"no BENCH_pr*.json baseline in {args.baseline_dir}; "
               f"nothing to guard")
         return
-    with open(args.current) as f:
-        current = json.load(f)
-    with open(base_path) as f:
-        baseline = json.load(f)
+    current = _load(args.current, "candidate")
+    baseline = _load(base_path, "baseline")
 
     failures, lines = compare(current, baseline, args.threshold)
     print(f"== perf regression guard vs {os.path.basename(base_path)} "

@@ -31,8 +31,8 @@ import traceback
 
 
 SUITES = ("analytical", "fig2", "fig3", "table1", "table2", "ingest",
-          "sharded", "lifecycle", "query", "scored", "paged_kv",
-          "roofline")
+          "sharded", "lifecycle", "query", "scored", "recovery",
+          "paged_kv", "roofline")
 
 
 def _jsonable(x):
@@ -111,10 +111,16 @@ def main(argv=None) -> None:
             print(f"[{name}: {wall:.1f}s"
                   + (f" (min of {len(walls)})" if len(walls) > 1 else "")
                   + "]")
-        except Exception:
+        except KeyboardInterrupt:
+            raise
+        except BaseException as exc:
+            # BaseException: a suite dying on SystemExit (an argparse
+            # sys.exit deep in a dependency) or a failed assert must
+            # still leave the OTHER suites' numbers in the JSON.
             wall = time.perf_counter() - t_run
-            report["suites"][name] = {"wall_s": wall, "ok": False,
-                                      "metrics": None}
+            report["suites"][name] = {
+                "wall_s": wall, "ok": False, "metrics": None,
+                "error": f"{type(exc).__name__}: {exc}"}
             report["failures"].append(name)
             print(f"[{name}: FAILED]")
             traceback.print_exc()

@@ -608,6 +608,26 @@ def check_stacked_lists(s, *, decode: bool = True) -> Report:
     return rep
 
 
+def check_engine(engine) -> Report:
+    """Whole-engine validation: :func:`check_pool_state` on the active
+    allocator plus :func:`check_segment_set` (with the engine's layout
+    and compaction fanout) over the frozen side, merged into one
+    report.  This is what ``validate=True`` engines run at every
+    rollover — scheduled or emergency — after engine-driven compaction,
+    and immediately after ``recovery.restore``: a snapshot that passes
+    its CRCs but encodes a structurally-broken state (tampering, a
+    writer bug) must fail HERE, not at the first wrong query result."""
+    rep = Report("check_engine")
+    _merge(rep, check_pool_state(engine.layout,
+                                 engine.segments.active.state), "active/")
+    policy = getattr(engine.segments, "compaction", None)
+    _merge(rep, check_segment_set(
+        engine.segments, layout=engine.layout,
+        fanout=policy.fanout if policy is not None else None),
+        "segments/")
+    return rep
+
+
 __all__ = ["InvariantViolation", "Violation", "Report",
-           "check_pool_state", "check_frozen_segment",
+           "check_engine", "check_pool_state", "check_frozen_segment",
            "check_segment_set", "check_stacked_lists"]

@@ -26,6 +26,16 @@ Rules (see ROADMAP.md "Architecture reference" for the table):
     factory is jitted with ``donate_argnums=0``: its first argument's
     buffer is invalid after the call.  Flag calls whose result is
     discarded, and reads of the donated variable before it is rebound.
+    Failure-path corollary (not statically checkable, enforced by
+    tests/test_bulk_ingest.py): when a donating call RAISES, the rebind
+    never ran and the caller-visible state may hold already-deleted
+    buffers.  Callers owning durable state must either leave it intact
+    (failure before dispatch) or explicitly poison it —
+    ``ActiveSegment``/``ShardedActiveSegment`` wrap the call and flip
+    ``_poisoned`` when any state leaf ``is_deleted()``, so every later
+    use raises at the cause instead of deep inside JAX.  Keep the check
+    in a helper called from the ``except`` block: reading the donated
+    name inline there would (correctly) trip this rule.
 ``host-sync-in-hot-path``
     Inside jitted / shard_mapped functions in ``core/`` and
     ``kernels/``: ``.item()``, ``.block_until_ready()``,

@@ -42,10 +42,33 @@ class ActiveSegment:
                 else slicepool.make_ingest_fn)
         self._ingest = make(self.layout, self.vocab_size)
         self._flatten = make_flattener()
+        self._poisoned = False
 
     @property
     def is_full(self) -> bool:
         return self.next_docid >= self.max_docs
+
+    def _poison_if_donated(self) -> None:
+        """After a failed donating dispatch, decide whether ``self.state``
+        is still usable.  The bulk path donates its input buffers
+        (``donate_argnums=0``): a failure BEFORE dispatch leaves them
+        intact, but a failure after donation leaves deleted buffers a
+        later read would hit with an opaque JAX error far from the
+        cause.  Mark the segment poisoned so every subsequent use fails
+        HERE, loudly (see the donation-rebind note in
+        repro.analysis.lint)."""
+        leaves = jax.tree_util.tree_leaves(self.state)
+        if any(getattr(leaf, "is_deleted", lambda: False)()
+               for leaf in leaves):
+            self._poisoned = True
+
+    def _check_poisoned(self) -> None:
+        if self._poisoned:
+            raise RuntimeError(
+                "ActiveSegment state was donated to an ingest dispatch "
+                "that failed: the buffers are gone and the segment is "
+                "poisoned. Rebuild the segment (or recover from a "
+                "snapshot + journal, see repro.core.recovery).")
 
     def ingest(self, docs: jax.Array, start_pools: Optional[jax.Array] = None,
                term_start_pools: Optional[jax.Array] = None) -> int:
@@ -58,12 +81,17 @@ class ActiveSegment:
             (SP policy table); gathered per occurrence.
         Returns the number of documents indexed.
         """
+        self._check_poisoned()
         batch = docs.shape[0]
         terms, plist, valid = self._flatten(docs, self.next_docid)
         if term_start_pools is not None:
             start_pools = gather_start_pools(
                 term_start_pools, terms, self.vocab_size)
-        self.state = self._ingest(self.state, terms, plist, start_pools, valid)
+        try:
+            self.state = self._ingest(self.state, terms, plist, start_pools, valid)
+        except BaseException:
+            self._poison_if_donated()
+            raise
         self.next_docid += batch
         return batch
 
@@ -74,6 +102,7 @@ class ActiveSegment:
         return np.asarray(self.state.freq)
 
     def check_health(self) -> None:
+        self._check_poisoned()
         if bool(self.state.overflow):
             raise MemoryError(
                 "slice pools exhausted; raise slices_per_pool in the layout")

@@ -254,6 +254,51 @@ class LifecycleStats:
     # without decoding) vs. blocks in structurally-live segments at all.
     scored_blocks_skipped: int = 0
     scored_blocks_live: int = 0
+    # graceful degradation (AdmissionController): rollovers forced by
+    # utilization pressure rather than the docs_per_segment boundary,
+    # batches that waited for one, and batches refused outright.
+    emergency_rollovers: int = 0
+    deferred_batches: int = 0
+    shed_batches: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionController:
+    """Graceful degradation under memory pressure.
+
+    The slice pool's ``overflow`` flag is STICKY and silent at ingest
+    time: once any pool runs out of slices, further postings there are
+    dropped and only :meth:`check_health` notices afterwards — by then
+    the index is already missing documents.  An engine built with
+    ``admission=AdmissionController(...)`` instead watches the
+    worst-pool live utilization (:func:`slicepool.pool_utilization`)
+    BEFORE each batch:
+
+      * ``utilization >= rollover_at`` — emergency rollover: freeze the
+        active segment early (off the ``docs_per_segment`` boundary) so
+        its slices return to the free lists before any pool can
+        overflow.  ``compact_k`` additionally triggers
+        ``segments.compact(compact_k)`` to bound the frozen-segment
+        count the early rollovers would otherwise inflate.
+      * ``utilization >= shed_at`` still, after any rollover — shed the
+        batch: ``ingest`` returns False without indexing, and
+        ``stats.shed_batches`` counts the refusal.  A shed batch is a
+        LOUD, counted degradation; a truncated posting list is a silent
+        one.
+
+    Both checks are pure functions of engine state, so a journal replay
+    (:mod:`repro.core.recovery`) reproduces every admission decision
+    bit-for-bit.
+    """
+    rollover_at: float = 0.85
+    shed_at: float = 1.0
+    compact_k: Optional[int] = None
+
+    def __post_init__(self):
+        if not (0.0 <= self.rollover_at <= self.shed_at):
+            raise ValueError(
+                f"need 0 <= rollover_at <= shed_at, got "
+                f"rollover_at={self.rollover_at} shed_at={self.shed_at}")
 
 
 class _LifecycleBase:
@@ -272,21 +317,32 @@ class _LifecycleBase:
     batched: bool
     validate: bool
 
-    def _init_shell(self, batched_kernel: Optional[bool]) -> None:
+    def _init_shell(self, batched_kernel: Optional[bool],
+                    admission: Optional[AdmissionController]) -> None:
         self._packed: List[PackedSegment] = []
         self._qstack: Optional[qexec.FrozenStack] = None
         # like ops.bulk_append: the batched grid kernel runs on a real
         # TPU backend; the CPU execution path is the jnp oracle (the
         # interpreter's per-element DMA simulation is not a hot path).
+        # The raw arg is kept so snapshots round-trip the CONFIG (None
+        # = resolve against the restoring backend), not the resolution.
+        self.batched_kernel = batched_kernel
         self._batched_kernel = (
             self.use_kernel and jax.default_backend() == "tpu"
             if batched_kernel is None else bool(batched_kernel))
+        self.admission = admission
         self.stats = LifecycleStats()
 
     # -- ingest ----------------------------------------------------------
-    def ingest(self, docs) -> None:
+    def ingest(self, docs) -> bool:
         """Index one arrival batch; segments roll over (freeze + reclaim
-        + re-pack) automatically when they fill."""
+        + re-pack) automatically when they fill.  Returns True when the
+        batch was indexed, False when the
+        :class:`AdmissionController` shed it (no ``admission`` →
+        always True)."""
+        if self.admission is not None and not self._admit():
+            self.stats.shed_batches += 1
+            return False
         self.segments.ingest(jnp.asarray(docs))
         prev = self.stats.rollovers
         self._sync_frozen()
@@ -295,30 +351,52 @@ class _LifecycleBase:
         # the watermark is a host sync that would otherwise stall the
         # async scan dispatch on every batch of the ingest hot path.
         if self.stats.rollovers != prev:
-            st = self.segments.active.state
-            self.stats.high_water_slots = slicepool.memory_high_water_slots(
-                self.layout, st)
-            self.stats.live_slots = slicepool.memory_slots_used(
-                self.layout, st)
+            self._refresh_memory_stats()
             if self.validate:
                 self.validate_invariants()
+        return True
+
+    def _admit(self) -> bool:
+        """Admission check for the next batch: emergency-roll the active
+        segment when utilization crosses ``rollover_at`` (reclaiming its
+        slices before any pool can overflow), then admit unless the
+        worst pool is STILL at/over ``shed_at``."""
+        adm = self.admission
+        util = slicepool.pool_utilization(self.layout,
+                                          self.segments.active.state)
+        if util >= adm.rollover_at and self.segments.active.next_docid > 0:
+            self.segments.rollover()
+            if adm.compact_k is not None:
+                self.segments.compact(adm.compact_k)
+            self._sync_frozen()
+            self.stats.emergency_rollovers += 1
+            self.stats.deferred_batches += 1
+            self._refresh_memory_stats()
+            if self.validate:
+                self.validate_invariants()
+            util = slicepool.pool_utilization(self.layout,
+                                              self.segments.active.state)
+        return util < adm.shed_at
+
+    def _refresh_memory_stats(self) -> None:
+        st = self.segments.active.state
+        self.stats.high_water_slots = slicepool.memory_high_water_slots(
+            self.layout, st)
+        self.stats.live_slots = slicepool.memory_slots_used(
+            self.layout, st)
 
     def validate_invariants(self) -> None:
         """Run the repro.analysis.invariants structural validators over
-        the allocator state and every frozen segment; raise
+        the allocator state and every frozen segment
+        (:func:`~repro.analysis.invariants.check_engine`); raise
         :class:`~repro.analysis.invariants.InvariantViolation` on the
         first broken invariant.  Called automatically at every rollover
-        (and engine-driven compaction) when the engine was built with
+        (scheduled or emergency), at engine-driven compaction, and after
+        ``recovery.restore`` when the engine was built with
         ``validate=True`` (debug flag — each call is an O(live postings)
         host walk, keep it off the production ingest path)."""
         from repro.analysis import invariants
-        invariants.check_pool_state(
-            self.layout, self.segments.active.state).raise_if_failed()
-        policy = getattr(self.segments, "compaction", None)
-        invariants.check_segment_set(
-            self.segments, layout=self.layout,
-            fanout=policy.fanout if policy is not None else None
-        ).raise_if_failed()
+        invariants.check_engine(self).raise_if_failed()
 
     def compact(self, k: int):
         """Merge the ``k`` oldest frozen segments
@@ -672,7 +750,8 @@ class LifecycleEngine(_LifecycleBase):
                  batched: bool = True,
                  batched_kernel: Optional[bool] = None,
                  validate: bool = False,
-                 compaction: Optional[seg_mod.CompactionPolicy] = None):
+                 compaction: Optional[seg_mod.CompactionPolicy] = None,
+                 admission: Optional[AdmissionController] = None):
         self.layout = layout
         self.vocab_size = vocab_size
         self.max_slices = max_slices
@@ -688,7 +767,7 @@ class LifecycleEngine(_LifecycleBase):
         self.engine = q.make_engine(layout, max_slices, max_len,
                                     max_query_len, use_kernel=use_kernel,
                                     interpret=interpret)
-        self._init_shell(batched_kernel)
+        self._init_shell(batched_kernel, admission)
 
     def _active_batch(self, kind: str, *args):
         if kind == "phrase":
@@ -749,7 +828,8 @@ class ShardedLifecycleEngine(_LifecycleBase):
                  batched: bool = True,
                  batched_kernel: Optional[bool] = None,
                  validate: bool = False,
-                 compaction: Optional[seg_mod.CompactionPolicy] = None):
+                 compaction: Optional[seg_mod.CompactionPolicy] = None,
+                 admission: Optional[AdmissionController] = None):
         self.layout = layout
         self.vocab_size = vocab_size
         self.max_slices = max_slices
@@ -767,7 +847,7 @@ class ShardedLifecycleEngine(_LifecycleBase):
             layout, mesh, max_slices, max_len, max_query_len,
             rules=self.segments.rules, use_kernel=use_kernel,
             interpret=interpret)
-        self._init_shell(batched_kernel)
+        self._init_shell(batched_kernel, admission)
 
     def _active_batch(self, kind: str, *args):
         """The sharded engine is ALREADY batched: one shard_map with one

@@ -389,13 +389,22 @@ class SegmentSet:
         if self.active.is_full:
             self.rollover()
 
-    def rollover(self) -> FrozenSegment:
+    def rollover(self) -> Optional[FrozenSegment]:
         """Freeze the active segment and RECYCLE its slices: the frozen
         postings live on as read-only CSR, while every slice the segment
         occupied goes back on the pool free lists for the next active
         segment (the Goldilocks loop — watermark bounded under churn).
         With a :class:`CompactionPolicy` attached, same-tier frozen
-        segments then cascade-merge so G stays O(log N)."""
+        segments then cascade-merge so G stays O(log N).
+
+        An EMPTY active segment is a no-op returning None: freezing it
+        would append a zero-doc frozen segment (breaking the
+        disjoint-ascending-range tiling's usefulness and burning a
+        ``max_segments`` slot) without reclaiming anything — the
+        emergency-rollover path can fire on an arbitrary batch boundary
+        and must be safe to call unconditionally."""
+        if self.active.next_docid == 0:
+            return None
         fz = freeze(self.active, doc_base=self._doc_base)
         # H(t) snapshot: the freqs of THIS rollover, taken before any
         # compaction can merge the segment into a multi-rollover tier

@@ -210,14 +210,36 @@ class ShardedActiveSegment:
         # default SP(z0) table, built once — ingest is the streaming hot
         # path and must not allocate a vocab-sized buffer per batch
         self._zero_table = jnp.zeros((self.vocab_size,), jnp.uint32)
+        self._poisoned = False
 
     @property
     def is_full(self) -> bool:
         return self.next_docid >= self.max_docs
 
+    def _poison_if_donated(self) -> None:
+        """Same contract as
+        :meth:`repro.core.index.ActiveSegment._poison_if_donated`: after
+        a failed (possibly donating) ingest dispatch, mark the segment
+        poisoned if any state buffer was consumed, so later uses fail
+        loudly at the cause instead of with an opaque deleted-buffer
+        error."""
+        leaves = jax.tree_util.tree_leaves(self.state)
+        if any(getattr(leaf, "is_deleted", lambda: False)()
+               for leaf in leaves):
+            self._poisoned = True
+
+    def _check_poisoned(self) -> None:
+        if self._poisoned:
+            raise RuntimeError(
+                "ShardedActiveSegment state was donated to an ingest "
+                "dispatch that failed: the buffers are gone and the "
+                "segment is poisoned. Rebuild the segment (or recover "
+                "from a snapshot + journal, see repro.core.recovery).")
+
     def ingest(self, docs: jax.Array,
                term_start_pools: Optional[jax.Array] = None) -> int:
         """Index ``docs`` (int32[B, L], -1-padded, B % S == 0)."""
+        self._check_poisoned()
         S = self.num_shards
         batch, L = docs.shape
         if batch % S:
@@ -232,7 +254,11 @@ class ShardedActiveSegment:
         base_local = jnp.uint32(self.next_docid // S)
         table = (self._zero_table if term_start_pools is None
                  else jnp.asarray(term_start_pools, jnp.uint32))
-        self.state = self._ingest(self.state, by_shard, base_local, table)
+        try:
+            self.state = self._ingest(self.state, by_shard, base_local, table)
+        except BaseException:
+            self._poison_if_donated()
+            raise
         self.next_docid += batch
         return batch
 
@@ -247,6 +273,7 @@ class ShardedActiveSegment:
         return slicepool.shard_slots_used(self.layout, self.state)
 
     def check_health(self) -> None:
+        self._check_poisoned()
         if bool(np.asarray(self.state.overflow).any()):
             raise MemoryError(
                 "slice pools exhausted on at least one shard; raise "
@@ -482,12 +509,16 @@ class ShardedSegmentSet:
         if self.active.is_full:
             self.rollover()
 
-    def rollover(self) -> ShardedFrozenSegment:
+    def rollover(self) -> Optional[ShardedFrozenSegment]:
         """Freeze every shard of the active segment into its own
         read-only CSR segment with GLOBAL docids, then recycle: each
         shard's slices go back on that shard's free lists
         (``slicepool.release_slices`` on the stacked state), so the next
-        active segment reuses them instead of bumping the watermark."""
+        active segment reuses them instead of bumping the watermark.
+        An empty active segment is a no-op returning None, matching
+        :meth:`~repro.core.segments.SegmentSet.rollover`."""
+        if self.active.next_docid == 0:
+            return None
         seg = self.active
         S = seg.num_shards
         heap = np.asarray(seg.state.heap)

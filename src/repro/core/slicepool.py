@@ -126,6 +126,24 @@ def shard_slots_used(layout: PoolLayout, state: PoolState):
                   axis=1)
 
 
+def pool_utilization(layout: PoolLayout, state: PoolState) -> float:
+    """Worst-case live-slice fill fraction across pools (and shards).
+
+    Per pool: (watermark − free_count) / slices_per_pool — the fraction
+    of that pool's slices live RIGHT NOW; the maximum over pools (and
+    over shards for a sharded ``[S, P]`` state) is what the
+    :class:`~repro.core.lifecycle.AdmissionController` watches.  1.0
+    means some pool has zero allocatable slices left: the NEXT
+    allocation there trips the sticky ``overflow`` flag and silently
+    drops postings.  Host-side numpy (one tiny sync), like the other
+    memory gauges.
+    """
+    live = (np.asarray(state.watermark, np.float64)
+            - np.asarray(state.free_count, np.float64))
+    caps = np.asarray(layout.slices_per_pool, np.float64)
+    return float(np.max(live / caps))
+
+
 def _insert_one(layout: PoolLayout, tbl, caps, state: PoolState,
                 term, posting, start_pool, valid) -> PoolState:
     """Branchless single-posting insert (one scan step)."""

@@ -208,3 +208,55 @@ def test_bulk_materializes_identically(small_layout):
         exp = posts[terms == t][::-1]
         assert int(n) == len(exp)
         assert np.array_equal(np.asarray(vals)[: int(n)], exp)
+
+
+# ---------------------------------------------------------------------------
+# Donated-state safety on FAILED ingest (lint.py "donation-rebind",
+# failure-path corollary): after a bulk-ingest call raises, the
+# caller-visible engine state must either still be usable (failure
+# before dispatch) or explicitly poisoned (buffers donated and gone) —
+# never a live-looking segment holding deleted buffers.
+# ---------------------------------------------------------------------------
+def test_failed_ingest_before_dispatch_leaves_segment_usable():
+    """A failure BEFORE the donating dispatch (bad operand shape) must
+    leave the segment fully usable: nothing was donated."""
+    from repro.core.index import ActiveSegment
+    layout = LAYOUTS[3]
+    seg = ActiveSegment(layout, vocab_size=16, max_docs=1000)
+    docs = np.zeros((4, 3), np.int32)
+    seg.ingest(jnp.asarray(docs))
+    with np.testing.assert_raises(Exception):
+        seg.ingest("not an array")        # dies in the flattener
+    assert not seg._poisoned
+    before = np.asarray(seg.state.freq).copy()
+    seg.ingest(jnp.asarray(docs))         # still works
+    seg.check_health()
+    assert np.asarray(seg.state.freq).sum() > before.sum()
+
+
+def test_failed_ingest_after_donation_poisons_segment():
+    """When the dispatch consumed (deleted) the donated state buffers
+    and THEN raised, the segment must flip to poisoned and every later
+    use must fail loudly at the cause."""
+    import pytest
+    from repro.core.index import ActiveSegment
+    layout = LAYOUTS[3]
+    seg = ActiveSegment(layout, vocab_size=16, max_docs=1000)
+    docs = np.zeros((4, 3), np.int32)
+    seg.ingest(jnp.asarray(docs))
+
+    real = seg._ingest
+
+    def consuming_failure(state, *a, **k):
+        real(state, *a, **k)              # donates + deletes the buffers
+        raise RuntimeError("simulated backend failure after dispatch")
+
+    seg._ingest = consuming_failure
+    with pytest.raises(RuntimeError, match="simulated backend"):
+        seg.ingest(jnp.asarray(docs))
+    assert seg._poisoned
+    seg._ingest = real
+    with pytest.raises(RuntimeError, match="poisoned"):
+        seg.ingest(jnp.asarray(docs))
+    with pytest.raises(RuntimeError, match="poisoned"):
+        seg.check_health()

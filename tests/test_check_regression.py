@@ -52,20 +52,67 @@ def test_pass_within_threshold_and_improvements():
     assert all("FAIL" not in ln for ln in lines)
 
 
-def test_missing_metric_skips_not_fails():
-    """Either side lacking a guarded metric (suite missing, suite not
-    ok, or key absent) is a skip — the guard must never block
-    adding/removing suites."""
+def test_baseline_missing_metric_skips_not_fails():
+    """The BASELINE lacking a guarded metric is a skip — the guard must
+    never block adding a new suite (its first run has no baseline
+    number to compare against)."""
+    old_base = _report(ingest={"bulk_docs_s": 1000.0})
+    failures, lines = cr.compare(BASE, old_base, threshold=0.30)
+    assert failures == []
+    assert sum("skip" in ln for ln in lines) == len(cr.GUARDS) - 1
+
+
+def test_candidate_missing_metric_fails_named():
+    """The CANDIDATE lacking a metric the baseline has (suite failed,
+    key dropped) is a named failure — a silently vanishing measurement
+    must not pass the guard."""
     cur = _report(ingest={"bulk_docs_s": 1.0})   # no speedup/query/scored
     failures, lines = cr.compare(cur, BASE, threshold=0.30)
     assert "ingest.bulk_docs_s" in failures      # real regression kept
-    assert sum("skip" in ln for ln in lines) == 4
-    # a failed suite's metrics don't count either
+    assert "ingest.bulk_vs_scan_speedup" in failures
+    assert "query.batched_ms_per_q_q128" in failures
+    assert any("lacks the metric" in ln for ln in lines)
+    # BASE has no recovery suite -> that guard skips, baseline side
+    assert sum(ln.lstrip().startswith("skip") for ln in lines) == 1
+    # a candidate suite that recorded ok: false counts as missing too
     bad = {"suites": {"ingest": {"ok": False,
                                  "metrics": {"bulk_docs_s": 9e9}}}}
-    failures, lines = cr.compare(bad, BASE, threshold=0.30)
-    assert failures == []
-    assert all("skip" in ln for ln in lines)
+    failures, _ = cr.compare(bad, BASE, threshold=0.30)
+    assert "ingest.bulk_docs_s" in failures
+
+
+def test_candidate_non_finite_metric_fails_named():
+    cur = _report(
+        ingest={"bulk_docs_s": float("nan"),
+                "bulk_vs_scan_speedup": float("inf")},
+        query={"batched_ms_per_q_q128": 2.0},
+        scored={"topk_ms_per_q_q128": 4.0, "block_skip_rate": 0.20})
+    failures, lines = cr.compare(cur, BASE, threshold=0.30)
+    assert failures == ["ingest.bulk_docs_s",
+                        "ingest.bulk_vs_scan_speedup"]
+    assert sum("not finite" in ln for ln in lines) == 2
+
+
+def test_main_missing_candidate_file_named_error(tmp_path, capsys):
+    (tmp_path / "BENCH_pr1.json").write_text(json.dumps(BASE))
+    with pytest.raises(SystemExit) as ei:
+        cr.main([str(tmp_path / "nope.json"),
+                 "--baseline-dir", str(tmp_path)])
+    assert ei.value.code == 1
+    out = capsys.readouterr().out
+    assert out.startswith("ERROR:") and "nope.json" in out
+    assert out.count("\n") == 1          # one line, no traceback
+
+
+def test_main_unparsable_candidate_named_error(tmp_path, capsys):
+    (tmp_path / "BENCH_pr1.json").write_text(json.dumps(BASE))
+    cur = tmp_path / "BENCH_ci.json"
+    cur.write_text("{not json")
+    with pytest.raises(SystemExit) as ei:
+        cr.main([str(cur), "--baseline-dir", str(tmp_path)])
+    assert ei.value.code == 1
+    out = capsys.readouterr().out
+    assert out.startswith("ERROR:") and "not valid JSON" in out
 
 
 def test_metric_helper_type_guards():

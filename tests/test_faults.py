@@ -1,0 +1,110 @@
+"""Fault-matrix sweep (repro.analysis.faults): every fault kind runs
+through :func:`~repro.analysis.faults.run_plan`, which asserts the
+recovery contract internally — crash plans recover bit-identical,
+corruption plans raise ``CorruptSnapshotError``, nothing is ever
+silently wrong.
+
+One plan per kind always runs (cheap tier-1 coverage); the seeded
+multi-position sweep — many (seed, snapshot_at, crash_at) combinations
+per kind — is CI's ``chaos`` job, gated behind ``REPRO_FAULTS=1``:
+
+    REPRO_FAULTS=1 PYTHONPATH=src python -m pytest tests/test_faults.py
+"""
+import os
+import tempfile
+
+import pytest
+
+from repro.analysis import faults as F
+
+FULL_SWEEP = os.environ.get("REPRO_FAULTS") == "1"
+
+
+@pytest.fixture(scope="module")
+def workdir():
+    with tempfile.TemporaryDirectory() as wd:
+        yield wd
+
+
+# ---------------------------------------------------------------------------
+# Cheap subset: one plan per matrix row, always on
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", F.KINDS)
+def test_fault_matrix_one_plan_per_kind(kind, workdir):
+    res = F.run_plan(F.FaultPlan(kind=kind, seed=3), workdir)
+    if kind in F.CORRUPTION_KINDS:
+        assert res.raised is not None
+    else:
+        assert res.recovered and res.fingerprint_equal and res.queries_equal
+
+
+def test_crash_plans_actually_crash(workdir):
+    """Guard the injector itself: for these seeds the mid-rollover /
+    mid-compaction bombs must FIRE (a silently disarmed injector would
+    make every crash plan vacuous)."""
+    for kind in F.CRASH_KINDS:
+        assert F.run_plan(F.FaultPlan(kind=kind, seed=3), workdir).crashed
+
+
+def test_drop_journal_tail_loses_acked_batches(workdir):
+    res = F.run_plan(F.FaultPlan(kind="drop_journal_tail", seed=1),
+                     workdir)
+    assert res.raised is not None and "watermark" in res.raised
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        F.FaultPlan(kind="meteor_strike")
+    with pytest.raises(ValueError):
+        F.FaultPlan(kind="crash_after_batch", snapshot_at=0)
+
+
+def test_run_plan_catches_contract_violation(workdir, monkeypatch):
+    """The harness itself must fail loudly if recovery were ever
+    silently wrong: break the comparison target and check run_plan
+    raises AssertionError (the chaos job's alarm actually rings)."""
+    monkeypatch.setattr(F, "query_results", lambda eng: id(eng))
+    with pytest.raises(AssertionError, match="differently"):
+        F.run_plan(F.FaultPlan(kind="crash_after_batch", seed=3), workdir)
+
+
+# ---------------------------------------------------------------------------
+# Seeded sweep: the chaos job (REPRO_FAULTS=1)
+# ---------------------------------------------------------------------------
+def _sweep_plans():
+    plans = []
+    for kind in F.KINDS:
+        for seed in (0, 1, 2):
+            plans.append(F.FaultPlan(kind=kind, seed=seed))
+    # crash position edges: first batch, right before/after the
+    # snapshot, mid-rollover arming from the very start, the last batch
+    for kind in F.CRASH_KINDS:
+        for snapshot_at, crash_at in ((1, 0), (4, 3), (4, 4), (12, 11),
+                                      (6, 0)):
+            plans.append(F.FaultPlan(kind=kind, seed=7,
+                                     snapshot_at=snapshot_at,
+                                     crash_at=crash_at))
+    # admission control on: shed/rollover decisions must replay too
+    for kind in F.CRASH_KINDS:
+        plans.append(F.FaultPlan(kind=kind, seed=5,
+                                 admission_rollover_at=0.3))
+    # no compaction configured (tier cascade off)
+    plans.append(F.FaultPlan(kind="crash_mid_rollover", seed=2,
+                             compaction_fanout=None))
+    plans.append(F.FaultPlan(kind="crash_after_batch", seed=2,
+                             compaction_fanout=None))
+    # validate=True engines: invariants checked at every recovery step
+    plans.append(F.FaultPlan(kind="crash_mid_rollover", seed=0,
+                             validate=True))
+    return plans
+
+
+@pytest.mark.skipif(not FULL_SWEEP,
+                    reason="seeded fault sweep is the chaos CI job; "
+                           "set REPRO_FAULTS=1 to run")
+@pytest.mark.parametrize("plan", _sweep_plans(),
+                         ids=lambda p: f"{p.kind}-s{p.seed}"
+                                       f"-snap{p.snapshot_at}"
+                                       f"-crash{p.crash_at}")
+def test_fault_sweep(plan, workdir):
+    F.run_plan(plan, workdir)   # asserts the contract internally

@@ -1,0 +1,474 @@
+"""Durability contract tests (repro.core.recovery + the admission
+controller): snapshot/restore bit-identity, journal framing (torn tails
+vs corruption), restore+replay crash recovery — including the seeded
+hypothesis property over crash position/kind — corrupted durable state
+failing LOUDLY, the validate-after-restore layer, and graceful
+degradation (emergency rollover before sticky overflow, shed batches).
+The full seeded fault-matrix sweep lives in tests/test_faults.py; the
+4-shard recovery path runs in a subprocess (forced host devices)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import faults as F
+from repro.analysis.invariants import InvariantViolation
+from repro.core import recovery as rec
+from repro.core import slicepool
+from repro.core.lifecycle import AdmissionController, LifecycleEngine
+from repro.core.pointers import PoolLayout
+
+
+def _plan(kind="crash_after_batch", **kw):
+    return F.FaultPlan(kind=kind, **kw)
+
+
+def _fed_engine(plan, n=None):
+    eng = F.make_engine(plan)
+    batches = F.make_batches(plan)
+    for docs in batches[: (len(batches) if n is None else n)]:
+        eng.ingest(docs)
+    return eng, batches
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore
+# ---------------------------------------------------------------------------
+def test_snapshot_restore_roundtrip_bit_identical(tmp_path):
+    plan = _plan(seed=7)
+    eng, _ = _fed_engine(plan)
+    assert eng.stats.rollovers >= 2        # frozen side is non-trivial
+    path = str(tmp_path / "snap.bin")
+    meta = rec.snapshot(eng, path, seq=plan.n_batches)
+    assert meta["seq"] == plan.n_batches
+    fp = rec.engine_fingerprint(eng)       # before queries mutate stats
+    got = rec.restore(path)
+    assert rec.engine_fingerprint(got) == fp
+    assert F.query_results(got) == F.query_results(eng)
+    # constructor overrides apply at restore time
+    assert rec.restore(path, validate=True).validate is True
+
+
+def test_snapshot_preserves_stats_and_config(tmp_path):
+    plan = _plan(seed=3, admission_rollover_at=0.9)
+    eng, _ = _fed_engine(plan)
+    path = str(tmp_path / "snap.bin")
+    rec.snapshot(eng, path)
+    got = rec.restore(path)
+    assert got.stats == eng.stats
+    assert got.admission == eng.admission
+    assert got.segments.compaction.fanout == plan.compaction_fanout
+
+
+def test_truncated_or_flipped_archive_raises(tmp_path):
+    plan = _plan(seed=1, n_batches=4)
+    eng, _ = _fed_engine(plan)
+    path = str(tmp_path / "snap.bin")
+    rec.snapshot(eng, path)
+    rng = np.random.default_rng(0)
+    for corrupt in (
+            lambda p: F.truncate_file(p, keep_fraction=0.4),
+            lambda p: F.flip_payload_byte(p, rng)):
+        rec.snapshot(eng, path)
+        corrupt(path)
+        with pytest.raises(rec.CorruptSnapshotError):
+            rec.restore(path)
+    with pytest.raises(rec.CorruptSnapshotError):
+        rec.restore(str(tmp_path / "never-written.bin"))
+    bad = tmp_path / "bad-magic.bin"
+    bad.write_bytes(b"\x00" * 64)
+    with pytest.raises(rec.CorruptSnapshotError, match="magic"):
+        rec.restore(str(bad))
+
+
+def test_missing_leaf_raises_corrupt_not_keyerror(tmp_path):
+    """A checksummed manifest missing a frozen/hist_freqs leaf is
+    corruption: restore must raise CorruptSnapshotError naming the
+    leaf, not a bare KeyError."""
+    plan = _plan(seed=7)
+    eng, _ = _fed_engine(plan)
+    path = str(tmp_path / "snap.bin")
+    meta = rec.snapshot(eng, path)
+    assert meta["frozen"] and meta["has_hist_freqs"]
+    for leaf in ("frozen/0/offsets", "hist_freqs", "active/watermark"):
+        arrays = rec.read_archive(path)[1]
+        del arrays[leaf]
+        rec.write_archive(path, meta, list(arrays.items()))
+        with pytest.raises(rec.CorruptSnapshotError, match=leaf):
+            rec.restore(path)
+
+
+def test_batched_kernel_round_trips_through_snapshot(tmp_path):
+    """An explicit batched_kernel must survive restore; the default
+    (None) must stay None so it re-resolves on the restoring backend."""
+    plan = _plan(seed=1)
+    path = str(tmp_path / "snap.bin")
+    for raw in (None, False, True):
+        eng = F.make_engine(plan)
+        if raw is not None:
+            eng = LifecycleEngine(eng.layout, 300, plan.docs_per_segment,
+                                  max_slices=eng.max_slices,
+                                  max_len=eng.max_len, use_kernel=False,
+                                  batched_kernel=raw)
+        rec.snapshot(eng, path)
+        got = rec.restore(path)
+        assert got.batched_kernel is raw
+        if raw is not None:
+            assert got._batched_kernel is raw
+
+
+def test_tampered_but_checksummed_restore_caught_by_validate(tmp_path):
+    """A snapshot whose CRCs all pass but whose STATE is structurally
+    broken (tampering / writer bug) must be caught by the invariant
+    validators right at restore — satellite: validate-after-restore."""
+    plan = _plan(seed=5, n_batches=6)
+    eng, _ = _fed_engine(plan)
+    path = str(tmp_path / "snap.bin")
+    rec.snapshot(eng, path)
+    F.rewrite_leaf(path, "active/watermark", lambda a: a + 3)
+    rec.restore(path)                      # validate=False: not caught…
+    with pytest.raises(InvariantViolation):
+        rec.restore(path, validate=True)   # …the validators catch it
+
+
+# ---------------------------------------------------------------------------
+# Journal framing
+# ---------------------------------------------------------------------------
+def _write_journal(path, arrays, base_seq=0):
+    with rec.IngestJournal(path, base_seq=base_seq) as j:
+        for a in arrays:
+            j.append(a)
+
+
+def test_journal_roundtrip_and_resume(tmp_path):
+    path = str(tmp_path / "j.bin")
+    a = [np.arange(6, dtype=np.uint32).reshape(2, 3),
+         np.ones((1, 4), np.uint32)]
+    _write_journal(path, a)
+    with rec.IngestJournal(path) as j:     # resume from existing file
+        assert j.next_seq == 2
+        j.append(np.zeros((2, 2), np.uint32))
+    base, records = rec.read_journal(path)
+    assert base == 0
+    assert [s for s, _ in records] == [0, 1, 2]
+    assert np.array_equal(records[0][1], a[0])
+    assert records[2][1].shape == (2, 2)
+
+
+def test_journal_fsync_flag_roundtrip(tmp_path):
+    path = str(tmp_path / "j.bin")
+    with rec.IngestJournal(path, fsync=True) as j:
+        assert j.fsync is True
+        j.append(np.ones((2, 2), np.uint32))
+    _, records = rec.read_journal(path)
+    assert len(records) == 1
+
+
+def test_journal_torn_tail_dropped_silently(tmp_path):
+    """A crash mid-append leaves a partial final record: the WAL
+    contract says that batch was never acked, so the reader drops it
+    without raising."""
+    path = str(tmp_path / "j.bin")
+    _write_journal(path, [np.full((2, 2), i, np.uint32)
+                          for i in range(3)])
+    full = os.path.getsize(path)
+    with open(path, "rb+") as f:
+        f.truncate(full - 5)               # cut inside the last record
+    _, records = rec.read_journal(path)
+    assert [s for s, _ in records] == [0, 1]
+
+
+def test_journal_resume_after_torn_tail_appends_safely(tmp_path):
+    """Resuming a journal whose tail is torn must TRUNCATE the torn
+    bytes before appending: otherwise the torn frame's declared length
+    swallows the newly appended (acked!) records on the next read."""
+    path = str(tmp_path / "j.bin")
+    _write_journal(path, [np.full((2, 2), i, np.uint32)
+                          for i in range(3)])
+    with open(path, "rb+") as f:
+        f.truncate(os.path.getsize(path) - 5)  # tear the last record
+    with rec.IngestJournal(path) as j:
+        assert j.next_seq == 2                 # torn record never acked
+        j.append(np.full((3, 3), 9, np.uint32))
+    base, records = rec.read_journal(path)
+    assert base == 0
+    assert [s for s, _ in records] == [0, 1, 2]
+    assert np.array_equal(records[2][1], np.full((3, 3), 9, np.uint32))
+
+
+def test_journal_damaged_length_field_raises(tmp_path):
+    """A flipped byte in a record's LENGTH field must raise, even on
+    the final record — without the length-field CRC it would swallow
+    everything after it as a fake torn tail."""
+    for flip_rec in (0, 2):                    # mid-file AND last record
+        path = str(tmp_path / f"j{flip_rec}.bin")
+        _write_journal(path, [np.full((2, 2), i, np.uint32)
+                              for i in range(3)])
+        with open(path, "rb") as f:
+            blob = bytearray(f.read())
+        hlen, _ = rec._HDR.unpack_from(blob, len(rec.JRNL_MAGIC))
+        pos = len(rec.JRNL_MAGIC) + rec._HDR.size + hlen
+        for _ in range(flip_rec):
+            body_len, _, _ = rec._REC.unpack_from(blob, pos)
+            pos += rec._REC.size + body_len
+        blob[pos] ^= 0xFF                      # low byte of body_len
+        with open(path, "wb") as f:
+            f.write(bytes(blob))
+        with pytest.raises(rec.CorruptSnapshotError, match="length"):
+            rec.read_journal(path)
+
+
+def test_journal_mid_file_corruption_raises(tmp_path):
+    path = str(tmp_path / "j.bin")
+    _write_journal(path, [np.full((2, 2), i, np.uint32)
+                          for i in range(3)])
+    with open(path, "rb") as f:
+        blob = bytearray(f.read())
+    hlen, _ = rec._HDR.unpack_from(blob, len(rec.JRNL_MAGIC))
+    first_body = len(rec.JRNL_MAGIC) + rec._HDR.size + hlen + rec._REC.size
+    blob[first_body + 8] ^= 0xFF           # damage record 0, not the tail
+    with open(path, "rb+") as f:
+        f.seek(0)
+        f.write(bytes(blob))
+    with pytest.raises(rec.CorruptSnapshotError, match="CRC"):
+        rec.read_journal(path)
+
+
+def test_journal_sequence_gap_raises(tmp_path):
+    path = str(tmp_path / "j.bin")
+    _write_journal(path, [np.zeros((1, 1), np.uint32)])
+    with open(path, "ab") as f:            # append seq 5 after seq 0
+        f.write(rec._pack_record(5, np.zeros((1, 1), np.uint32)))
+        f.write(rec._pack_record(6, np.zeros((1, 1), np.uint32)))
+    with pytest.raises(rec.CorruptSnapshotError, match="sequence"):
+        rec.read_journal(path)
+
+
+def test_recover_expect_seq_catches_missing_tail(tmp_path):
+    """Whole trailing records deleted: the journal still parses, only
+    the durable watermark can tell recovery is short."""
+    plan = _plan(seed=9, n_batches=6, snapshot_at=2)
+    eng = F.make_engine(plan)
+    batches = F.make_batches(plan)
+    snap, jrnl = str(tmp_path / "s.bin"), str(tmp_path / "j.bin")
+    with rec.IngestJournal(jrnl) as j:
+        for i, docs in enumerate(batches):
+            j.append(docs)
+            eng.ingest(docs)
+            if i + 1 == plan.snapshot_at:
+                rec.snapshot(eng, snap, seq=i + 1)
+    F.drop_journal_records(jrnl, 2)
+    with pytest.raises(rec.CorruptSnapshotError, match="watermark"):
+        rec.recover(snap, jrnl, expect_seq=plan.n_batches)
+    # without a watermark the shorter recovery is still bit-identical
+    # to an engine fed the shorter stream (no silent corruption)
+    got = rec.recover(snap, jrnl)
+    oracle = F.make_engine(plan)
+    for docs in batches[:-2]:
+        oracle.ingest(docs)
+    assert rec.engine_fingerprint(got) == rec.engine_fingerprint(oracle)
+
+
+def test_recover_snapshot_newer_than_journal_gap_raises(tmp_path):
+    """A journal whose records start AFTER the snapshot's seq (rotated
+    too early) is a gap, not a clean resume."""
+    plan = _plan(seed=2, n_batches=4, snapshot_at=2)
+    eng = F.make_engine(plan)
+    batches = F.make_batches(plan)
+    snap, jrnl = str(tmp_path / "s.bin"), str(tmp_path / "j.bin")
+    for i, docs in enumerate(batches):
+        eng.ingest(docs)
+        if i + 1 == plan.snapshot_at:
+            rec.snapshot(eng, snap, seq=i + 1)
+    _write_journal(jrnl, batches[3:], base_seq=3)  # seq 2 missing
+    with pytest.raises(rec.CorruptSnapshotError, match="missing"):
+        rec.recover(snap, jrnl)
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery property (single device; 4-shard runs in a subprocess)
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(F.CRASH_KINDS),
+       st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=10),
+       st.integers(min_value=0, max_value=11))
+def test_crash_recovery_bit_identical_property(kind, seed, snapshot_at,
+                                               crash_at):
+    """Crash injected after an arbitrary batch — including mid-rollover
+    and mid-compaction — then restore + journal replay must be
+    bit-identical to the uncrashed engine (fingerprint AND
+    conjunctive/disjunctive/phrase/scored_topk results).  run_plan
+    asserts the contract internally."""
+    plan = _plan(kind=kind, seed=seed, snapshot_at=snapshot_at,
+                 crash_at=crash_at)
+    with tempfile.TemporaryDirectory() as wd:
+        res = F.run_plan(plan, wd)
+    assert res.recovered and res.fingerprint_equal and res.queries_equal
+
+
+def test_mid_rollover_and_mid_compaction_crashes_fire():
+    """The injector must actually crash INSIDE a rollover / compaction
+    for the chosen seeds — otherwise the property above would be
+    vacuously passing on plain after-batch crashes."""
+    with tempfile.TemporaryDirectory() as wd:
+        assert F.run_plan(_plan("crash_mid_rollover", seed=3), wd).crashed
+        assert F.run_plan(_plan("crash_mid_compaction", seed=3),
+                          wd).crashed
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: AdmissionController
+# ---------------------------------------------------------------------------
+def test_admission_controller_validates_params():
+    with pytest.raises(ValueError):
+        AdmissionController(rollover_at=-0.1)
+    with pytest.raises(ValueError):
+        AdmissionController(rollover_at=0.9, shed_at=0.5)
+
+
+def _pressure_engine(admission, docs_per_segment=100_000, validate=False):
+    # pools small enough that ~15 batches of the plan stream exhaust
+    # them without reclamation; docs_per_segment too high to ever hit
+    # the scheduled rollover boundary — only the admission controller
+    # stands between this engine and sticky overflow.
+    layout = PoolLayout(z=(1, 4, 7, 11), slices_per_pool=(256, 96, 24, 6))
+    return LifecycleEngine(layout, 300, docs_per_segment, max_slices=64,
+                           max_len=64, use_kernel=False,
+                           validate=validate, admission=admission)
+
+
+def test_emergency_rollover_prevents_sticky_overflow():
+    plan = _plan(seed=11, n_batches=30)
+    batches = F.make_batches(plan)
+    naked = _pressure_engine(None)
+    for docs in batches:
+        naked.ingest(docs)
+    with pytest.raises(MemoryError):
+        naked.check_health()               # overflow: postings LOST
+
+    guarded = _pressure_engine(AdmissionController(rollover_at=0.6),
+                               validate=True)
+    for docs in batches:
+        assert guarded.ingest(docs)        # nothing shed
+    guarded.check_health()                 # no overflow anywhere
+    assert guarded.stats.emergency_rollovers >= 1
+    assert guarded.stats.deferred_batches \
+        == guarded.stats.emergency_rollovers
+    assert guarded.stats.shed_batches == 0
+    assert guarded.stats.docs_ingested == 30 * plan.batch_docs
+
+
+def test_shed_at_refuses_batches_loudly():
+    eng = _pressure_engine(AdmissionController(rollover_at=0.0,
+                                               shed_at=0.0))
+    docs = F.make_batches(_plan(seed=0))[0]
+    assert eng.ingest(docs) is False       # empty active: nothing to
+    assert eng.stats.shed_batches == 1     # roll, util still >= shed_at
+    assert eng.stats.docs_ingested == 0
+    assert eng.stats.emergency_rollovers == 0
+
+
+def test_admission_decisions_replay_bit_identical():
+    """Shed/rollover decisions are pure functions of engine state, so a
+    journal replay reproduces them — recovery stays bit-identical with
+    admission control on."""
+    plan = _plan(seed=4, admission_rollover_at=0.3)
+    with tempfile.TemporaryDirectory() as wd:
+        res = F.run_plan(plan, wd)
+    assert res.fingerprint_equal and res.queries_equal
+
+
+def test_empty_active_rollover_is_noop():
+    plan = _plan(seed=0)
+    eng = F.make_engine(plan)
+    assert eng.segments.rollover() is None
+    assert eng.segments.frozen == [] and eng.segments.n_rollovers == 0
+    eng.ingest(F.make_batches(plan)[0])
+    assert eng.segments.rollover() is not None
+    assert eng.segments.rollover() is None  # just rolled: active empty
+
+
+def test_pool_utilization_gauge():
+    plan = _plan(seed=0)
+    eng = F.make_engine(plan)
+    st0 = eng.segments.active.state
+    assert slicepool.pool_utilization(eng.layout, st0) == 0.0
+    eng.ingest(F.make_batches(plan)[0])
+    u = slicepool.pool_utilization(eng.layout, eng.segments.active.state)
+    assert 0.0 < u <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# 4-shard recovery (subprocess keeps forced host devices isolated)
+# ---------------------------------------------------------------------------
+SCRIPT_SHARDED = textwrap.dedent("""
+    from repro.dist import collectives as C
+    C.force_host_device_count(4)
+    import json
+    import tempfile
+
+    from repro.analysis import faults as F
+    from repro.core import recovery as rec
+    from repro.core.sharded_index import make_doc_mesh
+
+    mesh, rules = make_doc_mesh(4)
+    out = {}
+    wd = tempfile.mkdtemp()
+    for kind in ("crash_after_batch", "crash_mid_rollover",
+                 "drop_journal_tail"):
+        plan = F.FaultPlan(kind=kind, seed=13)
+        res = F.run_plan(plan, wd, mesh=mesh, rules=rules)
+        out[kind] = {"recovered": res.recovered, "crashed": res.crashed,
+                     "fp": res.fingerprint_equal, "q": res.queries_equal}
+
+    # restoring onto a different shard count must refuse: docid residue
+    # classes d % S only survive for the same S
+    plan = F.FaultPlan(kind="crash_after_batch", seed=13, n_batches=4,
+                       snapshot_at=2, crash_at=3)
+    eng = F.make_engine(plan, mesh, rules)
+    for docs in F.make_batches(plan):
+        eng.ingest(docs)
+    snap = wd + "/resnap.bin"
+    rec.snapshot(eng, snap)
+    mesh2, rules2 = make_doc_mesh(2)
+    try:
+        rec.restore(snap, mesh=mesh2, rules=rules2)
+        out["shard_mismatch"] = "no error"
+    except ValueError as e:
+        out["shard_mismatch"] = "ValueError" if "shard" in str(e) else str(e)
+    # mesh=None rebuilds the saved 4-shard mesh
+    got = rec.restore(snap)
+    out["auto_mesh_fp"] = (rec.engine_fingerprint(got)
+                           == rec.engine_fingerprint(eng))
+    print(json.dumps(out))
+""")
+
+
+def _run_subprocess(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_crash_recovery_bit_identical():
+    res = _run_subprocess(SCRIPT_SHARDED)
+    assert res["crash_after_batch"] == {"recovered": True, "crashed": True,
+                                        "fp": True, "q": True}
+    assert res["crash_mid_rollover"]["recovered"]
+    assert res["crash_mid_rollover"]["fp"] and res["crash_mid_rollover"]["q"]
+    assert res["drop_journal_tail"]["recovered"] is False
+    assert res["shard_mismatch"] == "ValueError"
+    assert res["auto_mesh_fp"] is True
