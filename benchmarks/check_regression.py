@@ -16,6 +16,8 @@ Guarded metrics:
   * scored top-k latency      (scored.topk_ms_per_q_q128, lower)
   * block-max skip rate       (scored.block_skip_rate, higher)
   * journal replay docs/s     (recovery.replay_docs_per_s, higher)
+  * serving tail latency      (serve.p99_ms, lower)
+  * sustained serving rate    (serve.sustained_qps, higher)
 
 Skip/fail semantics are asymmetric by side:
 
@@ -50,6 +52,8 @@ GUARDS = (
     ("scored", "topk_ms_per_q_q128", "lower"),
     ("scored", "block_skip_rate", "higher"),
     ("recovery", "replay_docs_per_s", "higher"),
+    ("serve", "p99_ms", "lower"),
+    ("serve", "sustained_qps", "higher"),
 )
 
 

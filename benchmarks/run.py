@@ -32,7 +32,7 @@ import traceback
 
 SUITES = ("analytical", "fig2", "fig3", "table1", "table2", "ingest",
           "sharded", "lifecycle", "query", "scored", "recovery",
-          "paged_kv", "roofline")
+          "serve", "paged_kv", "roofline")
 
 
 def _jsonable(x):

@@ -207,6 +207,25 @@ _CRASH_SITES = {
 }
 
 
+@contextlib.contextmanager
+def crash_site(kind: str):
+    """Arm the crash bomb for ``kind`` (a :data:`CRASH_KINDS` member)
+    for the duration of the ``with`` block: the next operation passing
+    through the site raises :class:`InjectedCrash`, leaving torn state
+    behind exactly like :func:`run_plan`'s crash phase.  The public
+    entry point for harnesses that drive their OWN workload — e.g. the
+    serving bench's chaos-under-load mode
+    (``benchmarks/bench_serve.py``), which crashes an engine mid-serve
+    and then measures ``recover()`` + resume."""
+    try:
+        module, name = _CRASH_SITES[kind]
+    except KeyError:
+        raise ValueError(f"unknown crash kind {kind!r}; "
+                         f"one of {sorted(_CRASH_SITES)}") from None
+    with _crash_on(module, name):
+        yield
+
+
 # ---------------------------------------------------------------------------
 # Durable-state corruption
 # ---------------------------------------------------------------------------
@@ -358,6 +377,7 @@ def run_plan(plan: FaultPlan, workdir: str, *, mesh=None,
 
 
 __all__ = ["CORRUPTION_KINDS", "CRASH_KINDS", "KINDS", "FaultPlan",
-           "FaultResult", "InjectedCrash", "drop_journal_records",
-           "flip_payload_byte", "make_batches", "make_engine",
-           "query_results", "rewrite_leaf", "run_plan", "truncate_file"]
+           "FaultResult", "InjectedCrash", "crash_site",
+           "drop_journal_records", "flip_payload_byte", "make_batches",
+           "make_engine", "query_results", "rewrite_leaf", "run_plan",
+           "truncate_file"]

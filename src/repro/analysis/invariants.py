@@ -628,6 +628,49 @@ def check_engine(engine) -> Report:
     return rep
 
 
+def check_serve(loop) -> Report:
+    """Conservation checks over a :class:`repro.core.serve.ServeLoop`'s
+    accounting: every submission is exactly one of rejected / served /
+    still queued / in flight, per-level service counts sum to the served
+    total, every rejection carried a positive retry-after (a zero one
+    would be a silent drop with extra steps), and every acked ingest
+    batch is exactly one of applied / finally-shed / replay-recovered /
+    still queued.  ``bench_serve`` runs this after every load leg, so a
+    lost request fails the bench loudly instead of flattering qps."""
+    rep = Report("check_serve")
+    s = loop.stats
+    accounted = (s.queries_rejected + s.queries_served
+                 + s.queries_aborted + loop.pending_queries
+                 + loop.in_flight_queries)
+    if s.queries_submitted != accounted:
+        rep.add("queries", f"submitted {s.queries_submitted} != rejected "
+                f"{s.queries_rejected} + served {s.queries_served} + "
+                f"aborted {s.queries_aborted} + queued "
+                f"{loop.pending_queries} + in-flight "
+                f"{loop.in_flight_queries} — a request was silently "
+                "dropped (or double-counted)")
+    if sum(s.served_by_level) != s.queries_served:
+        rep.add("levels", f"per-level counts {s.served_by_level} sum to "
+                f"{sum(s.served_by_level)} != served {s.queries_served} "
+                "— a response left without reporting its ladder rung")
+    if s.rejections_without_retry_after != 0:
+        rep.add("backpressure", f"{s.rejections_without_retry_after} "
+                "rejection(s) carried no positive retry-after — "
+                "backpressure must always tell the producer when to "
+                "come back")
+    ing = (s.ingest_rejected + s.ingest_applied + s.ingest_shed
+           + s.ingest_recovered + loop.pending_ingest)
+    if s.ingest_submitted != ing:
+        rep.add("ingest", f"submitted {s.ingest_submitted} != rejected "
+                f"{s.ingest_rejected} + applied {s.ingest_applied} + "
+                f"shed {s.ingest_shed} + recovered {s.ingest_recovered} "
+                f"+ queued {loop.pending_ingest} — an acked batch "
+                "vanished without a verdict")
+    rep.stats["queries_served"] = s.queries_served
+    rep.stats["ingest_applied"] = s.ingest_applied
+    return rep
+
+
 __all__ = ["InvariantViolation", "Violation", "Report",
            "check_engine", "check_pool_state", "check_frozen_segment",
-           "check_segment_set", "check_stacked_lists"]
+           "check_segment_set", "check_serve", "check_stacked_lists"]

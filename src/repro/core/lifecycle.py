@@ -286,6 +286,17 @@ class AdmissionController:
         LOUD, counted degradation; a truncated posting list is a silent
         one.
 
+    ``min_segment_docs`` withholds the emergency rollover while the
+    active segment holds fewer documents: every emergency rollover burns
+    a frozen-segment slot (``max_segments`` retires the oldest segment
+    once the set fills), so freezing a near-empty segment trades durable
+    data for a handful of reclaimed slices.  With the rollover withheld
+    and utilization still at/over ``shed_at`` the batch is shed instead
+    — the producer backs off, and a later rollover (scheduled, or
+    emergency once the segment has grown) frees the slices that let a
+    retried batch through (tests/test_serve.py exercises exactly that
+    shed-then-retry sequence).
+
     Both checks are pure functions of engine state, so a journal replay
     (:mod:`repro.core.recovery`) reproduces every admission decision
     bit-for-bit.
@@ -293,12 +304,16 @@ class AdmissionController:
     rollover_at: float = 0.85
     shed_at: float = 1.0
     compact_k: Optional[int] = None
+    min_segment_docs: int = 0
 
     def __post_init__(self):
         if not (0.0 <= self.rollover_at <= self.shed_at):
             raise ValueError(
                 f"need 0 <= rollover_at <= shed_at, got "
                 f"rollover_at={self.rollover_at} shed_at={self.shed_at}")
+        if self.min_segment_docs < 0:
+            raise ValueError(
+                f"need min_segment_docs >= 0, got {self.min_segment_docs}")
 
 
 class _LifecycleBase:
@@ -316,11 +331,20 @@ class _LifecycleBase:
     interpret: Optional[bool]
     batched: bool
     validate: bool
+    stable_shapes: bool
 
     def _init_shell(self, batched_kernel: Optional[bool],
                     admission: Optional[AdmissionController]) -> None:
         self._packed: List[PackedSegment] = []
         self._qstack: Optional[qexec.FrozenStack] = None
+        # shape-ratchet floors for the frozen-stack gathers (see
+        # qexec.FrozenStack): owned here so the ratchet survives stack
+        # rebuilds at rollover/compaction.  Results are bit-identical
+        # either way — padding is masked — but with the ratchet on, the
+        # gather shapes (jit keys) stop varying with per-batch posting
+        # lengths, which is what a latency-bounded serving loop needs.
+        self._shape_floors = (
+            {} if getattr(self, "stable_shapes", False) else None)
         # like ops.bulk_append: the batched grid kernel runs on a real
         # TPU backend; the CPU execution path is the jnp oracle (the
         # interpreter's per-element DMA simulation is not a hot path).
@@ -364,7 +388,9 @@ class _LifecycleBase:
         adm = self.admission
         util = slicepool.pool_utilization(self.layout,
                                           self.segments.active.state)
-        if util >= adm.rollover_at and self.segments.active.next_docid > 0:
+        if (util >= adm.rollover_at
+                and self.segments.active.next_docid
+                >= max(1, adm.min_segment_docs)):
             self.segments.rollover()
             if adm.compact_k is not None:
                 self.segments.compact(adm.compact_k)
@@ -429,7 +455,8 @@ class _LifecycleBase:
 
     def _frozen_stack(self) -> Optional[qexec.FrozenStack]:
         if self._qstack is None and self._packed:
-            self._qstack = qexec.FrozenStack(self._packed)
+            self._qstack = qexec.FrozenStack(self._packed,
+                                             floors=self._shape_floors)
         return self._qstack
 
     def check_health(self) -> None:
@@ -460,15 +487,36 @@ class _LifecycleBase:
                 f"reshard or reset doc_base")
         return jnp.uint32(base)
 
+    def _stub_active(self, rows: int):
+        """An empty active part for ``frozen_only`` evaluation: one
+        INVALID lane per (padded) query row, zero counts.  The merge
+        paths accept any active width, so the 1-wide stub skips the
+        active dispatch entirely — including, on the sharded engine, its
+        shard_map all_gather — which is the whole point of the
+        frozen-only degradation rung."""
+        return (jnp.full((rows, 1), qexec.INVALID, jnp.uint32),
+                jnp.zeros(rows, jnp.int32))
+
     def _batch_eval(self, kind: str, queries: Sequence,
-                    limit: Optional[int]) -> List[np.ndarray]:
+                    limit: Optional[int],
+                    frozen_only: bool = False) -> List[np.ndarray]:
         """Evaluate a whole query batch in O(1) dispatches: one batched
         active call, one frozen-stack call — NO per-segment host round
         trips (the per-query oracle does one ``np.asarray`` per segment
         per query)."""
+        return self._batch_eval_async(kind, queries, limit,
+                                      frozen_only=frozen_only).wait()
+
+    def _batch_eval_async(self, kind: str, queries: Sequence,
+                          limit: Optional[int], *,
+                          frozen_only: bool = False) -> qexec.Pending:
+        """Dispatch a whole query batch and return a
+        :class:`qexec.Pending`: the ONE host sync for the batch is
+        deferred to ``wait()``, so a caller can slip further dispatches
+        (the serving loop's ingest batch) into the gap."""
         Q = len(queries)
         if Q == 0:
-            return []
+            return qexec.Pending((), lambda: [])
         self._sync_frozen()   # pick up out-of-band compactions/rollovers
         if (kind == "conjunctive" and limit is not None
                 and limit <= _TOPK_LIMIT_MAX):
@@ -476,7 +524,8 @@ class _LifecycleBase:
             # Huge limits (a generous cap, not a real top-k) fall through
             # to full evaluation + slice — identical results without
             # compiling a pow2(limit)-wide banking buffer.
-            return self._batch_topk(queries, limit)
+            return self._batch_topk_async(queries, limit,
+                                          frozen_only=frozen_only)
         base = self._base_u32()
         stack = self._frozen_stack()
         if kind == "phrase":
@@ -486,7 +535,8 @@ class _LifecycleBase:
             t1[:Q] = [p[0] for p in queries]
             t2[:Q] = [p[1] for p in queries]
             live = jnp.asarray((np.arange(Qb) < Q).astype(np.int32))
-            ad, an = self._active_batch(kind, t1, t2)
+            ad, an = (self._stub_active(Qb) if frozen_only
+                      else self._active_batch(kind, t1, t2))
             if stack is None:
                 desc, n = qexec.finalize(ad, an, live, base)
             else:
@@ -501,7 +551,8 @@ class _LifecycleBase:
             # batch must not pay for max_query_len slots of decode/fold
             tb = min(qexec.bucket_pow2(int(n_terms.max()), 1),
                      self.max_query_len)
-            ad, an = self._active_batch(kind, terms, n_terms, tb)
+            ad, an = (self._stub_active(terms.shape[0]) if frozen_only
+                      else self._active_batch(kind, terms, n_terms, tb))
             if stack is None:
                 desc, n = qexec.finalize(ad, an, jnp.asarray(n_terms),
                                          base)
@@ -511,24 +562,36 @@ class _LifecycleBase:
                     ad, an, lists, jnp.asarray(n_terms), base, kind=kind,
                     nt_slots=tb,
                     kernel=self._batched_kernel, interpret=self.interpret)
-        D, N = np.asarray(desc), np.asarray(n)  # ONE sync for the batch
-        out = [D[i, : int(N[i])].astype(np.int64) for i in range(Q)]
-        return out if limit is None else [o[:limit] for o in out]
 
-    def _batch_topk(self, queries: Sequence, k: int) -> List[np.ndarray]:
+        def finish(D, N):  # ONE sync for the batch (inside wait())
+            out = [D[i, : int(N[i])].astype(np.int64) for i in range(Q)]
+            return out if limit is None else [o[:limit] for o in out]
+
+        return qexec.Pending((desc, n), finish)
+
+    def _batch_topk(self, queries: Sequence, k: int,
+                    frozen_only: bool = False) -> List[np.ndarray]:
+        return self._batch_topk_async(queries, k,
+                                      frozen_only=frozen_only).wait()
+
+    def _batch_topk_async(self, queries: Sequence, k: int, *,
+                          frozen_only: bool = False) -> qexec.Pending:
         Q = len(queries)
         if Q == 0:
-            return []
+            return qexec.Pending((), lambda: [])
         self._sync_frozen()   # pick up out-of-band compactions/rollovers
         k = int(k)
         if k <= 0:
-            return [np.zeros(0, np.int64) for _ in range(Q)]
+            empty = [np.zeros(0, np.int64) for _ in range(Q)]
+            return qexec.Pending((), lambda: empty)
         terms, n_terms = qexec.pad_query_batch(queries, self.max_query_len)
         tb = min(qexec.bucket_pow2(int(n_terms.max()), 1),
                  self.max_query_len)
         base = self._base_u32()
         k_pad = qexec.bucket_pow2(k, floor=8)
-        ad, an = self._active_topk_batch(terms, n_terms, k, k_pad, tb)
+        ad, an = (self._stub_active(terms.shape[0]) if frozen_only
+                  else self._active_topk_batch(terms, n_terms, k, k_pad,
+                                               tb))
         stack = self._frozen_stack()
         if stack is None:
             desc, n = qexec.finalize(ad, an, jnp.asarray(n_terms), base)
@@ -537,45 +600,106 @@ class _LifecycleBase:
             desc, n = qexec.frozen_topk(
                 ad, an, lists, jnp.asarray(n_terms), base, lasts,
                 jnp.int32(k), nt_slots=tb, k_pad=k_pad)
-        D, N = np.asarray(desc), np.asarray(n)
-        return [D[i, : min(int(N[i]), k)].astype(np.int64)
-                for i in range(Q)]
+
+        def finish(D, N):
+            return [D[i, : min(int(N[i]), k)].astype(np.int64)
+                    for i in range(Q)]
+
+        return qexec.Pending((desc, n), finish)
 
     def conjunctive_batch(self, queries: Sequence[Sequence[int]],
-                          limit: Optional[int] = None) -> List[np.ndarray]:
+                          limit: Optional[int] = None,
+                          frozen_only: bool = False) -> List[np.ndarray]:
         """Batched :meth:`conjunctive`: one list of GLOBAL descending
         docids per query, all queries in O(1) jitted dispatches."""
         if not self.batched:
-            return [self._unified("conjunctive", t, limit)
+            return [self._unified("conjunctive", t, limit, frozen_only)
                     for t in queries]
-        return self._batch_eval("conjunctive", queries, limit)
+        return self._batch_eval("conjunctive", queries, limit, frozen_only)
 
     def disjunctive_batch(self, queries: Sequence[Sequence[int]],
-                          limit: Optional[int] = None) -> List[np.ndarray]:
+                          limit: Optional[int] = None,
+                          frozen_only: bool = False) -> List[np.ndarray]:
         if not self.batched:
-            return [self._unified("disjunctive", t, limit)
+            return [self._unified("disjunctive", t, limit, frozen_only)
                     for t in queries]
-        return self._batch_eval("disjunctive", queries, limit)
+        return self._batch_eval("disjunctive", queries, limit, frozen_only)
 
     def phrase_batch(self, pairs: Sequence[Sequence[int]],
-                     limit: Optional[int] = None) -> List[np.ndarray]:
+                     limit: Optional[int] = None,
+                     frozen_only: bool = False) -> List[np.ndarray]:
         if not self.batched:
-            return [self._unified("phrase", p, limit) for p in pairs]
-        return self._batch_eval("phrase", pairs, limit)
+            return [self._unified("phrase", p, limit, frozen_only)
+                    for p in pairs]
+        return self._batch_eval("phrase", pairs, limit, frozen_only)
 
-    def topk_conjunctive(self, terms: Sequence[int], k: int) -> np.ndarray:
+    def topk_conjunctive(self, terms: Sequence[int], k: int,
+                         frozen_only: bool = False) -> np.ndarray:
         """The newest ``k`` docs holding every term — early-exit
         evaluation (stops consuming older segments / older slice-chain
         tiles once k hits are banked), bit-identical to
         ``conjunctive(terms)[:k]``."""
-        return self.topk_conjunctive_batch([terms], k)[0]
+        return self.topk_conjunctive_batch([terms], k, frozen_only)[0]
 
     def topk_conjunctive_batch(self, queries: Sequence[Sequence[int]],
-                               k: int) -> List[np.ndarray]:
+                               k: int,
+                               frozen_only: bool = False
+                               ) -> List[np.ndarray]:
         if not self.batched:
-            return [self._unified("conjunctive", t, int(k))
+            return [self._unified("conjunctive", t, int(k), frozen_only)
                     for t in queries]
-        return self._batch_topk(queries, k)
+        return self._batch_topk(queries, k, frozen_only)
+
+    def dispatch(self, kind: str, queries: Sequence, *,
+                 k: Optional[int] = None, limit: Optional[int] = None,
+                 frozen_only: bool = False) -> qexec.Pending:
+        """Dispatch a query batch WITHOUT waiting for its results.
+
+        The async entry point the serving loop
+        (:mod:`repro.core.serve`) builds on: device work is enqueued and
+        a :class:`qexec.Pending` returned immediately; ``wait()``
+        performs the batch's single host sync and yields exactly what
+        the corresponding synchronous method returns.  ``kind`` is one
+        of ``conjunctive`` / ``disjunctive`` / ``phrase`` (optionally
+        ``limit``-capped), ``topk`` (:meth:`topk_conjunctive_batch`,
+        needs ``k``), ``scored`` (:meth:`scored_topk_batch`, needs
+        ``k``) or ``scored_full`` (:meth:`scored_full_batch`).
+        ``frozen_only=True`` evaluates over the frozen segments only
+        (docids below :attr:`doc_base`), skipping the active dispatch —
+        the serving ladder's cheapest rung.  With ``batched=False`` the
+        oracle path runs eagerly and the Pending is already resolved.
+        """
+        if kind in ("topk", "scored") and k is None:
+            raise ValueError(f"kind {kind!r} needs k")
+        if not self.batched:
+            if kind == "topk":
+                res = [self._unified("conjunctive", t, int(k), frozen_only)
+                       for t in queries]
+            elif kind == "scored":
+                res = [self._scored_unified(t, int(k), frozen_only)
+                       for t in queries]
+            elif kind == "scored_full":
+                res = [self._scored_unified(t, k, frozen_only)
+                       for t in queries]
+            elif kind in ("conjunctive", "disjunctive", "phrase"):
+                res = [self._unified(kind, t, limit, frozen_only)
+                       for t in queries]
+            else:
+                raise ValueError(f"unknown query kind {kind!r}")
+            return qexec.Pending((), lambda: res)
+        if kind == "topk":
+            return self._batch_topk_async(queries, int(k),
+                                          frozen_only=frozen_only)
+        if kind == "scored":
+            return self._scored_batch_async(queries, int(k), full=False,
+                                            frozen_only=frozen_only)
+        if kind == "scored_full":
+            return self._scored_batch_async(queries, k, full=True,
+                                            frozen_only=frozen_only)
+        if kind in ("conjunctive", "disjunctive", "phrase"):
+            return self._batch_eval_async(kind, queries, limit,
+                                          frozen_only=frozen_only)
+        raise ValueError(f"unknown query kind {kind!r}")
 
     # -- queries: scored retrieval (block-max WAND / MaxScore) -----------
     def scored_topk(self, terms: Sequence[int], k: int) -> tuple:
@@ -590,10 +714,13 @@ class _LifecycleBase:
         return self.scored_topk_batch([terms], k)[0]
 
     def scored_topk_batch(self, queries: Sequence[Sequence[int]],
-                          k: int) -> List[tuple]:
+                          k: int, frozen_only: bool = False
+                          ) -> List[tuple]:
         if not self.batched:
-            return [self._scored_unified(t, int(k)) for t in queries]
-        return self._scored_batch(queries, int(k), full=False)
+            return [self._scored_unified(t, int(k), frozen_only)
+                    for t in queries]
+        return self._scored_batch(queries, int(k), full=False,
+                                  frozen_only=frozen_only)
 
     def scored_full(self, terms: Sequence[int],
                     k: Optional[int] = None) -> tuple:
@@ -602,31 +729,48 @@ class _LifecycleBase:
         return self.scored_full_batch([terms], k)[0]
 
     def scored_full_batch(self, queries: Sequence[Sequence[int]],
-                          k: Optional[int] = None) -> List[tuple]:
+                          k: Optional[int] = None,
+                          frozen_only: bool = False) -> List[tuple]:
         if not self.batched:
-            return [self._scored_unified(t, k) for t in queries]
-        return self._scored_batch(queries, k, full=True)
+            return [self._scored_unified(t, k, frozen_only)
+                    for t in queries]
+        return self._scored_batch(queries, k, full=True,
+                                  frozen_only=frozen_only)
 
     def _scored_batch(self, queries: Sequence, k: Optional[int],
-                      full: bool) -> List[tuple]:
+                      full: bool,
+                      frozen_only: bool = False) -> List[tuple]:
+        return self._scored_batch_async(queries, k, full=full,
+                                        frozen_only=frozen_only).wait()
+
+    def _scored_batch_async(self, queries: Sequence, k: Optional[int], *,
+                            full: bool,
+                            frozen_only: bool = False) -> qexec.Pending:
         Q = len(queries)
         if Q == 0:
-            return []
+            return qexec.Pending((), lambda: [])
         self._sync_frozen()   # pick up out-of-band compactions/rollovers
         if not full:
             if k <= 0:
-                return [(np.zeros(0, np.int64), np.zeros(0, np.int64))
-                        for _ in range(Q)]
+                empty = [(np.zeros(0, np.int64), np.zeros(0, np.int64))
+                         for _ in range(Q)]
+                return qexec.Pending((), lambda: empty)
             if k > _TOPK_LIMIT_MAX:
                 # a generous cap, not a real top-k: full evaluation +
                 # slice beats compiling a pow2(k)-wide heap.
-                return [(i[:k], s[:k]) for i, s in
-                        self._scored_batch(queries, None, True)]
+                inner = self._scored_batch_async(
+                    queries, None, full=True, frozen_only=frozen_only)
+                return qexec.Pending(
+                    (), lambda: [(i[:k], s[:k]) for i, s in inner.wait()])
         terms, n_terms = qexec.pad_query_batch(queries, self.max_query_len)
         tb = min(qexec.bucket_pow2(int(n_terms.max()), 1),
                  self.max_query_len)
         base = self._base_u32()
-        ad, asc, an = self._active_scored_batch(terms, n_terms, tb)
+        if frozen_only:
+            ad, an = self._stub_active(terms.shape[0])
+            asc = jnp.zeros((terms.shape[0], 1), jnp.int32)
+        else:
+            ad, asc, an = self._active_scored_batch(terms, n_terms, tb)
         stack = self._frozen_stack()
         if full:
             if stack is None:
@@ -639,42 +783,62 @@ class _LifecycleBase:
                     nt_slots=tb, kernel=self._batched_kernel,
                     interpret=self.interpret)
                 ids, scs, n = qexec.rank_scored(ids, scs, n)
-            D, S, N = np.asarray(ids), np.asarray(scs), np.asarray(n)
             lim = None if k is None else int(k)
-            return [(D[i, : int(N[i])].astype(np.int64)[:lim],
-                     S[i, : int(N[i])].astype(np.int64)[:lim])
-                    for i in range(Q)]
+
+            def finish_full(D, S, N):
+                return [(D[i, : int(N[i])].astype(np.int64)[:lim],
+                         S[i, : int(N[i])].astype(np.int64)[:lim])
+                        for i in range(Q)]
+
+            return qexec.Pending((ids, scs, n), finish_full)
         k_pad = qexec.bucket_pow2(k, floor=8)
         if stack is None:
             ids, scs, n = qexec.finalize_scored(
                 ad, asc, an, jnp.asarray(n_terms), base)
-        else:
-            sc, lasts, smax = stack.gather_scored(terms[:, :tb], n_terms)
-            ids, scs, n, bskip, blive = qexec.frozen_scored_topk(
-                ad, asc, an, sc, jnp.asarray(n_terms), base, lasts, smax,
-                jnp.int32(k), nt_slots=tb, k_pad=k_pad)
-            self.stats.scored_blocks_skipped += int(jnp.sum(bskip))
-            self.stats.scored_blocks_live += int(jnp.sum(blive))
-        D, S, N = np.asarray(ids), np.asarray(scs), np.asarray(n)
-        return [(D[i, : min(int(N[i]), k)].astype(np.int64),
-                 S[i, : min(int(N[i]), k)].astype(np.int64))
-                for i in range(Q)]
+
+            def finish_nostack(D, S, N):
+                return [(D[i, : min(int(N[i]), k)].astype(np.int64),
+                         S[i, : min(int(N[i]), k)].astype(np.int64))
+                        for i in range(Q)]
+
+            return qexec.Pending((ids, scs, n), finish_nostack)
+        sc, lasts, smax = stack.gather_scored(terms[:, :tb], n_terms)
+        ids, scs, n, bskip, blive = qexec.frozen_scored_topk(
+            ad, asc, an, sc, jnp.asarray(n_terms), base, lasts, smax,
+            jnp.int32(k), nt_slots=tb, k_pad=k_pad)
+
+        def finish(D, S, N, BS, BL):
+            # skip-counter bookkeeping rides the deferred sync so the
+            # dispatch path stays host-sync-free until wait()
+            self.stats.scored_blocks_skipped += int(BS.sum())
+            self.stats.scored_blocks_live += int(BL.sum())
+            return [(D[i, : min(int(N[i]), k)].astype(np.int64),
+                     S[i, : min(int(N[i]), k)].astype(np.int64))
+                    for i in range(Q)]
+
+        return qexec.Pending((ids, scs, n, bskip, blive), finish)
 
     def _scored_unified(self, terms: Sequence[int],
-                        k: Optional[int]) -> tuple:
+                        k: Optional[int],
+                        frozen_only: bool = False) -> tuple:
         """Per-query host-loop scored oracle (``batched=False``): active
         scores from the jitted engine, one numpy ``scored_packed`` per
         frozen segment, one stable full sort.  No early termination —
         the exactness reference for ``scored_topk``."""
         self._sync_frozen()
-        tmat, n_terms = qexec.pad_query_batch([tuple(terms)],
-                                              self.max_query_len)
-        tb = min(qexec.bucket_pow2(int(n_terms.max()), 1),
-                 self.max_query_len)
-        ad, asc, an = self._active_scored_batch(tmat, n_terms, tb)
-        n0 = int(an[0])
-        ids = [np.asarray(ad[0])[:n0].astype(np.int64) + self.doc_base]
-        scs = [np.asarray(asc[0])[:n0].astype(np.int64)]
+        if frozen_only:
+            ids = [np.zeros(0, np.int64)]
+            scs = [np.zeros(0, np.int64)]
+        else:
+            tmat, n_terms = qexec.pad_query_batch([tuple(terms)],
+                                                  self.max_query_len)
+            tb = min(qexec.bucket_pow2(int(n_terms.max()), 1),
+                     self.max_query_len)
+            ad, asc, an = self._active_scored_batch(tmat, n_terms, tb)
+            n0 = int(an[0])
+            ids = [np.asarray(ad[0])[:n0].astype(np.int64)
+                   + self.doc_base]
+            scs = [np.asarray(asc[0])[:n0].astype(np.int64)]
         for pseg in reversed(self._packed):   # newest frozen first
             i, s = scored_packed(pseg, terms)
             ids.append(i)
@@ -689,9 +853,11 @@ class _LifecycleBase:
 
     # -- queries: per-query host-loop oracle (batched=False) -------------
     def _unified(self, kind: str, terms: Sequence[int],
-                 limit: Optional[int]) -> np.ndarray:
+                 limit: Optional[int],
+                 frozen_only: bool = False) -> np.ndarray:
         self._sync_frozen()   # pick up out-of-band compactions/rollovers
-        parts = [self._active_desc(kind, terms)]
+        parts = [np.zeros(0, np.int64) if frozen_only
+                 else self._active_desc(kind, terms)]
         total = len(parts[0])
         for pseg in reversed(self._packed):   # newest frozen first
             # segments own disjoint descending docid ranges, so once the
@@ -712,29 +878,36 @@ class _LifecycleBase:
         return out[:limit] if limit is not None else out
 
     def conjunctive(self, terms: Sequence[int],
-                    limit: Optional[int] = None) -> np.ndarray:
+                    limit: Optional[int] = None,
+                    frozen_only: bool = False) -> np.ndarray:
         """GLOBAL docids holding every term, newest first, across the
         active pool and all frozen segments.  ``batched=True`` (default)
         routes through the qexec stack — with a ``limit`` this is the
         early-exit top-k; ``batched=False`` keeps the per-query
-        host-loop oracle.  Both are bit-identical."""
+        host-loop oracle.  Both are bit-identical.  ``frozen_only=True``
+        answers from the frozen segments alone (every docid <
+        :attr:`doc_base`) — identical to the full result with
+        active-segment docids filtered out."""
         if self.batched:
             return self._batch_eval("conjunctive", [tuple(terms)],
-                                    limit)[0]
-        return self._unified("conjunctive", terms, limit)
+                                    limit, frozen_only)[0]
+        return self._unified("conjunctive", terms, limit, frozen_only)
 
     def disjunctive(self, terms: Sequence[int],
-                    limit: Optional[int] = None) -> np.ndarray:
+                    limit: Optional[int] = None,
+                    frozen_only: bool = False) -> np.ndarray:
         if self.batched:
             return self._batch_eval("disjunctive", [tuple(terms)],
-                                    limit)[0]
-        return self._unified("disjunctive", terms, limit)
+                                    limit, frozen_only)[0]
+        return self._unified("disjunctive", terms, limit, frozen_only)
 
     def phrase(self, t1: int, t2: int,
-               limit: Optional[int] = None) -> np.ndarray:
+               limit: Optional[int] = None,
+               frozen_only: bool = False) -> np.ndarray:
         if self.batched:
-            return self._batch_eval("phrase", [(t1, t2)], limit)[0]
-        return self._unified("phrase", (t1, t2), limit)
+            return self._batch_eval("phrase", [(t1, t2)], limit,
+                                    frozen_only)[0]
+        return self._unified("phrase", (t1, t2), limit, frozen_only)
 
 
 class LifecycleEngine(_LifecycleBase):
@@ -750,6 +923,7 @@ class LifecycleEngine(_LifecycleBase):
                  batched: bool = True,
                  batched_kernel: Optional[bool] = None,
                  validate: bool = False,
+                 stable_shapes: bool = False,
                  compaction: Optional[seg_mod.CompactionPolicy] = None,
                  admission: Optional[AdmissionController] = None):
         self.layout = layout
@@ -761,6 +935,7 @@ class LifecycleEngine(_LifecycleBase):
         self.interpret = interpret
         self.batched = batched
         self.validate = validate
+        self.stable_shapes = stable_shapes
         self.segments = seg_mod.SegmentSet(
             layout, vocab_size, docs_per_segment, max_segments=max_segments,
             bulk_ingest=bulk_ingest, compaction=compaction)
@@ -828,6 +1003,7 @@ class ShardedLifecycleEngine(_LifecycleBase):
                  batched: bool = True,
                  batched_kernel: Optional[bool] = None,
                  validate: bool = False,
+                 stable_shapes: bool = False,
                  compaction: Optional[seg_mod.CompactionPolicy] = None,
                  admission: Optional[AdmissionController] = None):
         self.layout = layout
@@ -839,6 +1015,7 @@ class ShardedLifecycleEngine(_LifecycleBase):
         self.interpret = interpret
         self.batched = batched
         self.validate = validate
+        self.stable_shapes = stable_shapes
         self.segments = shx.ShardedSegmentSet(
             layout, vocab_size, docs_per_segment, mesh, rules=rules,
             max_segments=max_segments, bulk_ingest=bulk_ingest,

@@ -88,8 +88,18 @@ class FrozenStack:
     compaction bounds the gather cost and the pow2(G) jit-recompile
     cadence under an infinite stream."""
 
-    def __init__(self, psegs: Sequence):
+    def __init__(self, psegs: Sequence,
+                 floors: Optional[Dict[str, int]] = None):
         self.psegs = list(psegs)
+        # shape ratchet (serving-path option): when a dict is supplied,
+        # every gather raises its pow2 width bucket to the largest one
+        # this dict has recorded and records its own — so the jitted
+        # downstream shapes STOP varying with the batch's posting
+        # lengths once the heaviest term has been seen.  The dict is
+        # owned by the engine and shared across stack rebuilds, keeping
+        # the ratchet through rollovers/compactions.  ``None`` (the
+        # default) keeps the original per-batch minimal buckets.
+        self.floors = floors
         self.doc_bases = np.asarray([p.doc_base for p in self.psegs],
                                     np.uint32)
         self._terms: Dict[int, Tuple[StackedLists, np.ndarray]] = {}
@@ -167,6 +177,15 @@ class FrozenStack:
             self._posts[term] = got
         return got
 
+    def _ratchet(self, key: str, val: int) -> int:
+        """Raise ``val`` to the remembered floor for ``key`` (and the
+        floor to ``val``).  Identity when the ratchet is off."""
+        if self.floors is None:
+            return val
+        val = max(val, self.floors.get(key, 1))
+        self.floors[key] = val
+        return val
+
     # -- batch gathers ----------------------------------------------------
     def gather(self, terms: np.ndarray, n_terms: np.ndarray
                ) -> Tuple[StackedLists, jax.Array]:
@@ -181,8 +200,10 @@ class FrozenStack:
                   else self._empty_stack()
                   for j, t in enumerate(row)]
                  for row, n in zip(terms, n_terms)]
-        nb = bucket_pow2(max(c[0].n_blocks for row in cells for c in row))
-        pw = bucket_pow2(max(c[0].n_words for row in cells for c in row))
+        nb = self._ratchet("nb", bucket_pow2(
+            max(c[0].n_blocks for row in cells for c in row)))
+        pw = self._ratchet("pw", bucket_pow2(
+            max(c[0].n_words for row in cells for c in row)))
         rows = [[repad_stacked(c[0], nb, pw) for c in row] for row in cells]
         leaves = StackedLists(*[
             np.stack([np.stack([getattr(c, f) for c in row])
@@ -202,10 +223,10 @@ class FrozenStack:
                   else self._empty_scored()
                   for j, t in enumerate(row)]
                  for row, n in zip(terms, n_terms)]
-        nb = bucket_pow2(max(c[0].ids.n_blocks
-                             for row in cells for c in row))
-        pw = bucket_pow2(max(c[0].ids.n_words
-                             for row in cells for c in row))
+        nb = self._ratchet("snb", bucket_pow2(
+            max(c[0].ids.n_blocks for row in cells for c in row)))
+        pw = self._ratchet("spw", bucket_pow2(
+            max(c[0].ids.n_words for row in cells for c in row)))
         rows = [[repad_scored(c[0], nb, pw) for c in row] for row in cells]
         ids = StackedLists(*[
             np.stack([np.stack([getattr(c.ids, f) for c in row])
@@ -236,7 +257,8 @@ class FrozenStack:
               for i, t in enumerate(t1s)]
         p2 = [self._post_stack(int(t)) if i < n_live else empty
               for i, t in enumerate(t2s)]
-        width = bucket_pow2(max(a.shape[1] for a in p1 + p2))
+        width = self._ratchet("pl", bucket_pow2(
+            max(a.shape[1] for a in p1 + p2)))
 
         def pad(stacks):
             out = np.full((len(stacks), self.n_segments, width), INVALID,
@@ -846,6 +868,50 @@ def make_active_fn(layout: PoolLayout, max_slices: int, max_len: int,
             return jax.vmap(one)(terms, n_terms)
 
     return run
+
+
+# ---------------------------------------------------------------------------
+# Deferred host sync (the serving layer's dispatch/wait split)
+# ---------------------------------------------------------------------------
+class Pending:
+    """A dispatched query batch whose device->host sync is DEFERRED.
+
+    Everything up to the final ``np.asarray`` stays asynchronous under
+    JAX's dispatch model: the engine's ``*_async`` methods build device
+    arrays and return immediately; only :meth:`wait` blocks.  The
+    serving loop (:mod:`repro.core.serve`) exploits the gap — dispatch a
+    query batch, then dispatch the next ingest batch (whose bulk-append
+    donates the active ``PoolState``; same-device dispatch order keeps
+    the query's read before the overwrite), and only then sync the query
+    results, so ingest compute overlaps the result transfer instead of
+    serialising behind it.
+
+    ``arrays`` are the in-flight device arrays; ``finish`` receives
+    their host (numpy) values and builds the per-query python result —
+    the same structure the synchronous engine method returns.  ``wait``
+    is idempotent and drops the device arrays after the first call.
+    """
+
+    __slots__ = ("_arrays", "_finish", "_done", "_result")
+
+    def __init__(self, arrays, finish):
+        self._arrays = tuple(arrays)
+        self._finish = finish
+        self._done = False
+        self._result = None
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def wait(self):
+        if not self._done:
+            host = [np.asarray(a) for a in self._arrays]
+            self._arrays = ()
+            finish, self._finish = self._finish, None
+            self._result = finish(*host)
+            self._done = True
+        return self._result
 
 
 def pad_query_batch(queries: Sequence[Sequence[int]], max_query_len: int

@@ -220,6 +220,7 @@ def snapshot(engine, path: str, *, seq: int = 0) -> Dict[str, Any]:
         # against whatever backend restores the snapshot
         "batched_kernel": engine.batched_kernel,
         "validate": bool(engine.validate),
+        "stable_shapes": bool(getattr(engine, "stable_shapes", False)),
         "compaction_fanout": (int(policy.fanout)
                               if policy is not None else None),
         "admission": (dataclasses.asdict(admission)
@@ -292,6 +293,7 @@ def _build_engine(meta: Dict[str, Any], arrays: Dict[str, np.ndarray],
         bulk_ingest=cfg["bulk_ingest"], batched=cfg["batched"],
         batched_kernel=cfg.get("batched_kernel"),
         validate=cfg["validate"],
+        stable_shapes=cfg.get("stable_shapes", False),
         compaction=(seg_mod.CompactionPolicy(fanout=fanout)
                     if fanout is not None else None),
         admission=(lc.AdmissionController(**adm_cfg)
@@ -563,7 +565,7 @@ def read_journal(path: str) -> Tuple[int, List[Tuple[int, np.ndarray]]]:
 # ---------------------------------------------------------------------------
 def recover(snapshot_path: str, journal_path: Optional[str] = None, *,
             mesh=None, rules=None, expect_seq: Optional[int] = None,
-            **overrides):
+            on_replay=None, **overrides):
     """Restore the snapshot, then replay journaled batches through the
     ordinary ingest path.  Returns the recovered engine.
 
@@ -573,7 +575,11 @@ def recover(snapshot_path: str, journal_path: Optional[str] = None, *,
     tail, restored-from-older-copy file) parses cleanly, and only this
     check can tell that apart from a clean shutdown.  If the snapshot +
     journal cover fewer than ``expect_seq`` batches,
-    :class:`CorruptSnapshotError` is raised."""
+    :class:`CorruptSnapshotError` is raised.
+
+    ``on_replay(seq, docs, admitted)`` is called after each replayed
+    batch (``admitted`` is the ingest's admission verdict) — the serving
+    loop's hook for progress accounting while it is unavailable."""
     meta, arrays = read_archive(snapshot_path)
     eng = _build_engine(meta, arrays, mesh=mesh, rules=rules, **overrides)
     applied = int(meta["seq"])
@@ -587,8 +593,10 @@ def recover(snapshot_path: str, journal_path: Optional[str] = None, *,
                     f"{journal_path}: first replayable record is seq "
                     f"{seq} but the snapshot was taken at seq {applied} "
                     f"— journal records between them are missing")
-            eng.ingest(docs)
+            ok = eng.ingest(docs)
             applied += 1
+            if on_replay is not None:
+                on_replay(seq, docs, ok)
     if expect_seq is not None and applied < int(expect_seq):
         raise CorruptSnapshotError(
             f"recovery covers only {applied} batches but the durable "

@@ -1,5 +1,8 @@
-"""Paged-KV serving driver: continuous batching over the slice-pool
-allocator (the paper's policy running a decoder's KV store).
+"""Paged-KV MODEL-serving demo: continuous batching of a decoder's KV
+store over the slice-pool allocator (the paper's policy applied to a
+transformer's KV cache — NOT the search-index serving loop; that is
+:mod:`repro.core.serve`, exercised by ``benchmarks/bench_serve.py`` and
+documented in ``docs/serving.md``).
 
     PYTHONPATH=src python -m repro.launch.serve --requests 12 --z 6,8,10
 
@@ -29,7 +32,10 @@ from repro.paged import serve_model as SM
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="paged-KV model-serving demo (decoder KV cache on "
+                    "the slice-pool allocator); the search-index "
+                    "serving loop lives in repro.core.serve")
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-seqs", type=int, default=4)

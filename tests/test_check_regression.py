@@ -72,8 +72,11 @@ def test_candidate_missing_metric_fails_named():
     assert "ingest.bulk_vs_scan_speedup" in failures
     assert "query.batched_ms_per_q_q128" in failures
     assert any("lacks the metric" in ln for ln in lines)
-    # BASE has no recovery suite -> that guard skips, baseline side
-    assert sum(ln.lstrip().startswith("skip") for ln in lines) == 1
+    # BASE has no recovery/serve suites -> those guards skip, baseline
+    # side (one line per guard whose suite BASE lacks)
+    absent = sum(1 for suite, _, _ in cr.GUARDS
+                 if suite not in BASE["suites"])
+    assert sum(ln.lstrip().startswith("skip") for ln in lines) == absent
     # a candidate suite that recorded ok: false counts as missing too
     bad = {"suites": {"ingest": {"ok": False,
                                  "metrics": {"bulk_docs_s": 9e9}}}}
